@@ -1,0 +1,49 @@
+"""Render the roofline table from runs/roofline/*.json artifacts
+(produced by `python -m repro.launch.roofline --all`).
+
+Emits CSV + a markdown table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).parent.parent
+
+
+def load(mesh: str = "single", outdir: str = "runs/roofline"):
+    rows = []
+    for f in sorted((ROOT / outdir).glob(f"*_{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful-FLOPs ratio |\n|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        t = r["terms_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print("bench_roofline: no artifacts yet "
+              "(run python -m repro.launch.roofline --all)")
+        return
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,useful")
+    for r in rows:
+        t = r["terms_s"]
+        print(f"{r['arch']},{r['shape']},{t['compute_s']:.4e},"
+              f"{t['memory_s']:.4e},{t['collective_s']:.4e},"
+              f"{r['dominant']},{r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Reproduce the paper's headline comparison (Table II / Fig. 3a).
+
+Runs FedHAP-oneHAP, FedHAP-GS and the baselines on the same constellation
+and prints accuracy-vs-simulated-hours curves side by side.
+
+  PYTHONPATH=src python examples/paper_reproduction.py            # quick
+  PYTHONPATH=src python examples/paper_reproduction.py --full     # paper scale
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+from benchmarks import bench_table2
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--methods", default=None,
+                    help="comma list of Table II rows to run")
+    ap.add_argument("--out", default="runs/paper_reproduction.json")
+    args = ap.parse_args()
+    methods = args.methods.split(",") if args.methods else None
+    rows = bench_table2.run(quick=not args.full, methods=methods)
+
+    print("\n=== Table II reproduction ===")
+    print(f"{'method':<18} {'accuracy':>9} {'rounds':>7} {'sim hours':>10}")
+    for r in rows:
+        print(f"{r['method']:<18} {r['final_acc']:>9.4f} "
+              f"{r['rounds']:>7d} {r['sim_hours']:>10.2f}")
+    ordered = sorted(rows, key=lambda r: -r["final_acc"])
+    print(f"\nbest: {ordered[0]['method']} @ {ordered[0]['final_acc']:.4f}")
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    json.dump(rows, open(args.out, "w"), indent=1)
+    print(f"histories written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

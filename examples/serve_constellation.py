@@ -1,0 +1,14 @@
+"""Serve a (reduced) assigned architecture with batched greedy decoding —
+the inference side of the framework, including the SSM O(1)-state path.
+
+  PYTHONPATH=src python examples/serve_constellation.py --arch rwkv6-3b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "rwkv6-3b", "--batch", "4",
+                                 "--prompt-len", "12", "--gen", "20"])
+    main()

@@ -1,0 +1,101 @@
+"""End-to-end federated LM pre-training driver (~100M-parameter model).
+
+Trains a ~100M-parameter qwen3-family decoder federated across 4
+satellites (2 orbits) with FedHAP rounds on synthetic per-satellite token
+corpora. On this CPU container the defaults run a short demonstration;
+--steps 200 --d-model 768 reproduces the full "few hundred steps of a
+~100M model" deliverable (budget: a few hours of CPU).
+
+  PYTHONPATH=src python examples/train_constellation.py --rounds 30
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.core.dissemination import ConstellationMeshMap
+from repro.core.fed_step import FedTrainConfig, stack_params
+from repro.launch.train import _ensure_coverage, _single_device_round, \
+    make_batches
+from repro.core.mesh_round import FedRoundConfig
+from repro.models.transformer import Transformer
+
+
+def build_model(d_model: int, layers: int, vocab: int) -> Transformer:
+    cfg = get_config("qwen3-0.6b")
+    cfg = dataclasses.replace(
+        cfg, name=f"qwen3-{d_model}d{layers}L", num_layers=layers,
+        d_model=d_model, d_ff=4 * d_model, vocab_size=vocab,
+        num_heads=max(4, d_model // 128), num_kv_heads=max(2, d_model //
+                                                           256),
+        head_dim=64, param_dtype="float32", act_dtype="float32",
+        remat=False, attn_chunk_q=256, sliding_window=None,
+        long_context_mode="native")
+    return Transformer(cfg)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--sats", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch-per-sat", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--partial-mode", default="exact",
+                    choices=["paper", "exact"])
+    ap.add_argument("--visibility", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default="runs/train_constellation")
+    args = ap.parse_args()
+
+    model = build_model(args.d_model, args.layers, args.vocab)
+    cfg = model.cfg
+    n_params = model.count_params()
+    print(f"[fed-train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.sats} satellites, FedHAP partial_mode={args.partial_mode}")
+
+    cmap = ConstellationMeshMap(n_orbits=2,
+                                sats_per_orbit=args.sats // 2, n_pods=1)
+    fed_cfg = FedTrainConfig(
+        round_cfg=FedRoundConfig(cmap=cmap,
+                                 partial_mode=args.partial_mode,
+                                 ship_global_echo=False),
+        round_kind="fedhap", local_steps=1, learning_rate=args.lr)
+
+    params = model.init(jax.random.key(0))
+    params_S = stack_params(params, args.sats)
+    sizes = jnp.ones((args.sats,), jnp.float32)
+    rng = np.random.default_rng(0)
+    step_fn = jax.jit(_single_device_round(model, fed_cfg))
+
+    t0 = time.time()
+    losses = []
+    for rnd in range(args.rounds):
+        batch = make_batches(cfg, args.sats, args.batch_per_sat, args.seq,
+                             rnd, args.vocab)
+        visible = jnp.asarray(_ensure_coverage(rng, cmap, args.visibility))
+        params_S, metrics = step_fn(params_S, batch, sizes, visible)
+        losses.append(float(metrics["local_loss"]))
+        if rnd % 5 == 0 or rnd == args.rounds - 1:
+            tok_s = (args.sats * args.batch_per_sat * args.seq * (rnd + 1)
+                     / (time.time() - t0))
+            print(f"  round {rnd:4d}  loss {losses[-1]:.4f}  "
+                  f"({tok_s:,.0f} tok/s)", flush=True)
+    assert losses[-1] < losses[0], "federated training must reduce loss"
+    save_checkpoint(args.ckpt_dir, jax.tree.map(lambda x: x[0], params_S),
+                    args.rounds, {"arch": cfg.name, "losses": losses})
+    print(f"[fed-train] loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"checkpoint in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

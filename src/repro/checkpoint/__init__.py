@@ -1,0 +1,4 @@
+"""Host-side checkpointing (npz + json manifest, sharding-aware)."""
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+
+__all__ = ["load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,84 @@
+"""Checkpointing: flat-key npz arrays + a json manifest.
+
+Keys are the pytree paths; the manifest records step metadata, the
+original dtypes, and the tree structure so `load_checkpoint` can rebuild
+the exact pytree. Arrays are gathered to host before writing (the mesh
+round keeps replicas identical post-broadcast, so rank-0 semantics are
+trivial on a single-process runtime).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str | pathlib.Path, tree: Any, step: int,
+                    metadata: Optional[dict] = None) -> pathlib.Path:
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    path = d / f"ckpt_{step:08d}.npz"
+    # npz has no bfloat16: store exotic dtypes as raw uint16/uint8 views;
+    # the manifest records the true dtype for the load path.
+    storable = {
+        k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+        for k, v in flat.items()
+    }
+    np.savez(path, **storable)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+    }
+    (d / f"ckpt_{step:08d}.json").write_text(json.dumps(manifest, indent=1))
+    (d / "latest.json").write_text(json.dumps({"step": step}))
+    return path
+
+
+def load_checkpoint(directory: str | pathlib.Path, tree_like: Any,
+                    step: Optional[int] = None) -> tuple[Any, dict]:
+    """Rebuild the pytree using `tree_like` for structure. Returns
+    (tree, manifest)."""
+    d = pathlib.Path(directory)
+    if step is None:
+        step = json.loads((d / "latest.json").read_text())["step"]
+    manifest = json.loads((d / f"ckpt_{step:08d}.json").read_text())
+    data = np.load(d / f"ckpt_{step:08d}.npz")
+    flat_like = _flatten(tree_like)
+    if sorted(flat_like) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_like)
+        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)}")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    rebuilt = []
+    for path, leaf in leaves_like:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(
+                f"{key}: shape {arr.shape} != expected {np.shape(leaf)}")
+        rebuilt.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), rebuilt)
+    return tree, manifest

@@ -1,0 +1,39 @@
+"""Architecture + run configuration registry.
+
+`get_config(name)` returns the full assigned configuration;
+`get_config(name).reduced()` returns the CPU-smoke-test variant
+(<=2 layers, d_model<=512, <=4 experts).
+"""
+from repro.configs.base import (
+    ArchConfig,
+    MambaConfig,
+    MlaConfig,
+    MoEConfig,
+    RwkvConfig,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Importing the modules registers the architectures.
+from repro.configs import (  # noqa: F401
+    jamba_v01_52b,
+    pixtral_12b,
+    mistral_nemo_12b,
+    qwen3_moe_30b_a3b,
+    granite_moe_1b_a400m,
+    deepseek_coder_33b,
+    whisper_small,
+    rwkv6_3b,
+    minicpm3_4b,
+    qwen3_0_6b,
+    paper_cnn,
+    paper_mlp,
+)
+
+__all__ = [
+    "ArchConfig", "MambaConfig", "MlaConfig", "MoEConfig", "RwkvConfig",
+    "ShapeConfig", "SHAPES", "get_config", "list_configs", "register",
+]

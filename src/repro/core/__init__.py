@@ -1,0 +1,25 @@
+"""FedHAP core: the paper's contribution as composable JAX modules.
+
+- `aggregation`: Eq. 14 partial aggregation (paper recursion + exact
+  running-mean correction), Eq. 15 dedup set cover, Eq. 16 full
+  aggregation, closed-form chain weights.
+- `mesh_round`: the hierarchical FedHAP round as shard_map collectives on
+  the production mesh (intra-orbit ppermute rings, masked HAP psum,
+  inter-HAP pod-axis ring), plus the FedAvg baseline round and the
+  beyond-paper "fused" round.
+- `dissemination`: ring schedules / source-sink ordering shared by the
+  mesh round and the timeline simulator.
+- `strategies`: timeline-level FedHAP / FedISL / FedSat / FedSpace.
+"""
+from repro.core.aggregation import (
+    chain_weights,
+    dedup_set_cover,
+    full_aggregate,
+    partial_aggregate,
+    segment_upload_weights,
+)
+
+__all__ = [
+    "chain_weights", "dedup_set_cover", "full_aggregate",
+    "partial_aggregate", "segment_upload_weights",
+]

@@ -1,0 +1,177 @@
+"""FedHAP aggregation math (paper Eq. 14-16).
+
+Two partial-aggregation modes:
+
+- ``"paper"`` — Eq. 14 verbatim: w <- (1-γ_k')·w + γ_k'·w_k' with
+  γ_k' = m_k'/m (m = the orbit's total data size). The telescoped chain
+  weights are *order-dependent* and do NOT equal the per-orbit weighted
+  mean (easy to check with two equal-size satellites: weights become
+  [(1-γ)..., γ...] ≠ uniform).
+- ``"exact"`` — beyond-paper correction: γ_k' = m_k'/(m_acc + m_k') (the
+  running weighted mean), whose chain telescopes exactly to
+  Σ m_i w_i / Σ m_i over the folded satellites.
+
+Both are exposed everywhere (timeline simulator, mesh round) and compared
+in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def partial_aggregate(
+    w_acc: Any,
+    w_new: Any,
+    m_new: float,
+    m_orbit_total: float,
+    m_acc: float,
+    mode: str = "paper",
+):
+    """One Eq.-14 hop: fold satellite k' (weight m_new) into the partial
+    model w_acc (accumulated mass m_acc). Returns (w_updated, m_acc_new).
+
+    Works on arbitrary pytrees (numpy or jax arrays).
+    """
+    if mode == "paper":
+        gamma = m_new / m_orbit_total
+    elif mode == "exact":
+        gamma = m_new / (m_acc + m_new)
+    else:
+        raise ValueError(f"unknown partial aggregation mode: {mode}")
+    upd = jax.tree.map(
+        lambda a, b: (1.0 - gamma) * a + gamma * b, w_acc, w_new
+    )
+    return upd, m_acc + m_new
+
+
+def chain_weights(
+    sizes: Sequence[float], m_orbit_total: float, mode: str = "paper"
+) -> np.ndarray:
+    """Closed-form effective weight of each chain member.
+
+    ``sizes[0]`` is the *origin* (visible satellite whose local model seeds
+    the chain); subsequent entries are the invisible satellites folded in
+    order. The result λ satisfies:
+        chain_result == Σ_i λ_i · w_i,   Σ_i λ_i == 1.
+
+    paper mode:  λ_i = γ_i · Π_{u>i} (1-γ_u), γ_0 ≡ 1, γ_i = m_i/m_orbit.
+    exact mode:  λ_i = m_i / Σ_j m_j (the weighted mean).
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    n = len(sizes)
+    if mode == "exact":
+        return sizes / sizes.sum()
+    if mode != "paper":
+        raise ValueError(mode)
+    gammas = sizes / m_orbit_total
+    gammas[0] = 1.0
+    lam = np.empty(n)
+    suffix = 1.0
+    for i in range(n - 1, -1, -1):
+        lam[i] = gammas[i] * suffix
+        suffix *= (1.0 - gammas[i]) if i > 0 else 1.0
+    return lam
+
+
+def segment_upload_weights(
+    visible: np.ndarray,
+    sizes: np.ndarray,
+    mode: str = "paper",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-satellite closed-form weights for one orbit ring.
+
+    Given the ring's visibility mask and data sizes, computes for every
+    satellite x:
+      - ``lam[x]``: its weight inside its chain segment,
+      - ``seg_end[x]``: the slot (visible satellite) its segment delivers to,
+      - ``seg_mass[x]``: the segment's total data mass (Eq. 16's m_U).
+
+    A segment starts at a visible satellite and folds the following run of
+    invisible satellites, delivering to the *next* visible satellite. If no
+    satellite is visible the orbit contributes nothing (all seg_end = -1):
+    Eq. 15's missing-ID gating.
+    """
+    visible = np.asarray(visible, dtype=bool)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    k = len(visible)
+    lam = np.zeros(k)
+    seg_end = np.full(k, -1, dtype=np.int64)
+    seg_mass = np.zeros(k)
+    if not visible.any():
+        return lam, seg_end, seg_mass
+    m_orbit = sizes.sum()
+    vis_idx = np.nonzero(visible)[0]
+    for o in vis_idx:
+        members = [o]
+        j = (o + 1) % k
+        while not visible[j]:
+            members.append(j)
+            j = (j + 1) % k
+        w = chain_weights(sizes[members], m_orbit, mode)
+        mass = sizes[members].sum()
+        for mi, wi in zip(members, w):
+            lam[mi] = wi
+            seg_end[mi] = j
+            seg_mass[mi] = mass
+    return lam, seg_end, seg_mass
+
+
+def dedup_set_cover(
+    partials: Sequence[tuple[frozenset[int], float, Any]],
+) -> tuple[list[tuple[frozenset[int], float, Any]], set[int]]:
+    """Eq. 15: filter redundant partial models by satellite-ID metadata.
+
+    ``partials`` is a list of (covered satellite IDs, data mass, model).
+    Keeps a subset whose coverage sets are pairwise disjoint (greedy in
+    the given order — HAP arrival order, as the paper's source HAP would
+    see them) and returns (kept, covered_ids).
+    """
+    covered: set[int] = set()
+    kept = []
+    for ids, mass, model in partials:
+        if ids & covered:
+            continue  # redundant: some satellite already covered
+        kept.append((ids, mass, model))
+        covered |= ids
+    return kept, covered
+
+
+def full_aggregate(
+    per_orbit: dict[int, list[tuple[float, Any]]],
+    orbit_weighting: str = "paper",
+):
+    """Eq. 16: combine deduped partial models into the new global model.
+
+    ``per_orbit[l]`` = [(mass, model), ...] for orbit l.
+
+    paper mode: each orbit is normalized by its own mass m_l and orbits
+    are averaged with equal weight (Eq. 16 as written, normalized by L so
+    the weights sum to one — see DESIGN.md §6.4).
+    global mode: every partial weighted by mass/total_mass (Eq. 4's n_k/n).
+    """
+    orbits = sorted(per_orbit)
+    if not orbits:
+        raise ValueError("no partial models to aggregate")
+    if orbit_weighting == "paper":
+        acc = None
+        for l in orbits:
+            m_l = sum(m for m, _ in per_orbit[l])
+            for mass, model in per_orbit[l]:
+                w = mass / m_l / len(orbits)
+                acc = (jax.tree.map(lambda x: w * x, model) if acc is None
+                       else jax.tree.map(lambda a, x: a + w * x, acc, model))
+        return acc
+    if orbit_weighting == "global":
+        total = sum(m for l in orbits for m, _ in per_orbit[l])
+        acc = None
+        for l in orbits:
+            for mass, model in per_orbit[l]:
+                w = mass / total
+                acc = (jax.tree.map(lambda x: w * x, model) if acc is None
+                       else jax.tree.map(lambda a, x: a + w * x, acc, model))
+        return acc
+    raise ValueError(orbit_weighting)

@@ -1,0 +1,56 @@
+"""Ring schedules shared by the mesh round and the timeline simulator.
+
+The worker tier lays a point-to-point ring on each orbit (paper §III-A);
+the server tier orders HAPs source -> ... -> sink (§III-B1). Directions
+are pre-designated (paper: "either clockwise or counter-clockwise").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstellationMeshMap:
+    """How the constellation maps onto the device mesh (DESIGN.md §8).
+
+    The `data` axis concatenates `n_orbits` contiguous rings of
+    `sats_per_orbit` satellites; each pod hosts one HAP and its own
+    orbit set.
+    """
+    n_orbits: int = 4
+    sats_per_orbit: int = 4
+    n_pods: int = 1
+
+    @property
+    def sats_per_pod(self) -> int:
+        return self.n_orbits * self.sats_per_orbit
+
+    @property
+    def total_sats(self) -> int:
+        return self.sats_per_pod * self.n_pods
+
+    def orbit_of(self, data_idx: int) -> int:
+        return data_idx // self.sats_per_orbit
+
+    def slot_of(self, data_idx: int) -> int:
+        return data_idx % self.sats_per_orbit
+
+    def ring_permutation(self, direction: int = +1) -> list[tuple[int, int]]:
+        """(src, dst) pairs rotating each orbit ring on the data axis."""
+        pairs = []
+        k = self.sats_per_orbit
+        for d in range(self.sats_per_pod):
+            orbit_start = (d // k) * k
+            dst = orbit_start + (d % k + direction) % k
+            pairs.append((d, dst))
+        return pairs
+
+
+def hap_chain_down(n_pods: int) -> list[tuple[int, int]]:
+    """sink -> source direction on the pod axis (partial models, §III-B3)."""
+    return [(p, p - 1) for p in range(1, n_pods)]
+
+
+def hap_chain_up(n_pods: int) -> list[tuple[int, int]]:
+    """source -> sink direction (global model, §III-B1)."""
+    return [(p, p + 1) for p in range(n_pods - 1)]

@@ -1,0 +1,32 @@
+"""Timeline-level FL strategies (paper baselines).
+
+The implementations live in `repro.sim.timeline` (they need the physical
+simulator); this module is the stable import surface and documents the
+mapping to the paper's Table II rows:
+
+| strategy        | paper row            | PS setup                  |
+|-----------------|----------------------|---------------------------|
+| fedhap          | FedHAP-oneHAP/twoHAP | HAP(s), arbitrary location|
+| fedhap + gs     | FedHAP-GS            | GS, arbitrary location    |
+| fedisl          | FedISL               | GS, arbitrary location    |
+| fedisl_ideal    | FedISL (ideal)       | MEO PS above the equator  |
+| fedsat          | FedSat (ideal)       | GS at the North Pole      |
+| fedspace        | FedSpace             | GS, arbitrary location    |
+"""
+from repro.sim.timeline import SatcomSimulator, SimConfig, SimResult
+
+STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace")
+
+# Station setups used by the paper's experiments.
+TABLE2_SETUPS: dict[str, SimConfig] = {
+    "FedISL": SimConfig(strategy="fedisl", stations="gs"),
+    "FedISL (ideal)": SimConfig(strategy="fedisl_ideal", stations="meo"),
+    "FedSat (ideal)": SimConfig(strategy="fedsat", stations="gs_np"),
+    "FedSpace": SimConfig(strategy="fedspace", stations="gs"),
+    "FedHAP-GS": SimConfig(strategy="fedhap", stations="gs"),
+    "FedHAP-oneHAP": SimConfig(strategy="fedhap", stations="one_hap"),
+    "FedHAP-twoHAP": SimConfig(strategy="fedhap", stations="two_hap"),
+}
+
+__all__ = ["SatcomSimulator", "SimConfig", "SimResult", "STRATEGIES",
+           "TABLE2_SETUPS"]

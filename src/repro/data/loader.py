@@ -1,0 +1,89 @@
+"""Batching and federated data containers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+
+class BatchIterator:
+    """Deterministic infinite shuffled mini-batch iterator over arrays.
+
+    Mirrors the paper's per-satellite mini-batch SGD stream (batch 32).
+    Reshuffles each epoch with a per-epoch PRNG stream.
+    """
+
+    def __init__(
+        self,
+        arrays: Sequence[np.ndarray],
+        batch_size: int,
+        seed: int = 0,
+        drop_remainder: bool = True,
+    ) -> None:
+        n = len(arrays[0])
+        if any(len(a) != n for a in arrays):
+            raise ValueError("arrays must share their leading dimension")
+        if n < batch_size and drop_remainder:
+            raise ValueError(f"dataset ({n}) smaller than batch ({batch_size})")
+        self._arrays = [np.asarray(a) for a in arrays]
+        self._n = n
+        self._bs = batch_size
+        self._seed = seed
+        self._drop = drop_remainder
+        self._epoch = 0
+        self._order = self._reshuffle()
+        self._pos = 0
+
+    def _reshuffle(self) -> np.ndarray:
+        rng = np.random.default_rng((self._seed, self._epoch))
+        return rng.permutation(self._n)
+
+    def __iter__(self) -> Iterator[tuple[np.ndarray, ...]]:
+        return self
+
+    def __next__(self) -> tuple[np.ndarray, ...]:
+        if self._pos + self._bs > self._n:
+            self._epoch += 1
+            self._order = self._reshuffle()
+            self._pos = 0
+        idx = self._order[self._pos : self._pos + self._bs]
+        self._pos += self._bs
+        return tuple(a[idx] for a in self._arrays)
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def epoch_batches(self) -> int:
+        return self._n // self._bs
+
+
+@dataclasses.dataclass
+class FederatedData:
+    """Per-satellite views over a global dataset."""
+    images: np.ndarray
+    labels: np.ndarray
+    client_indices: list[np.ndarray]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_indices)
+
+    def client_sizes(self) -> np.ndarray:
+        """n_k of Eq. 1 / m_k of Eq. 14, per satellite."""
+        return np.array([len(ix) for ix in self.client_indices])
+
+    def client_iterator(
+        self, client: int, batch_size: int, seed: int = 0
+    ) -> BatchIterator:
+        ix = self.client_indices[client]
+        return BatchIterator(
+            [self.images[ix], self.labels[ix]],
+            batch_size=batch_size,
+            seed=seed * 1_000_003 + client,
+        )
+
+    def client_arrays(self, client: int) -> tuple[np.ndarray, np.ndarray]:
+        ix = self.client_indices[client]
+        return self.images[ix], self.labels[ix]

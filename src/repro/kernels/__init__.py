@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel lives in `<name>.py` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with jit'd wrappers in `ops.py` and pure-jnp oracles in `ref.py`.
+On CPU the wrappers run the kernels with ``interpret=True`` (the kernel
+body executes step-by-step in Python), which is how the shape/dtype sweep
+tests validate them against the oracles.
+
+Kernels:
+- ``fedagg``          — fused weighted multi-replica parameter aggregation
+                        (the FedHAP hot loop: Eq. 14/16 weighted sums).
+- ``flash_attention`` — blockwise causal/SWA GQA attention (MXU-aligned
+                        128x128 tiles, online softmax).
+- ``selective_scan``  — Mamba chunked selective-SSM scan.
+- ``rwkv6_wkv``       — RWKV-6 data-dependent-decay recurrence.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,142 @@
+"""Blockwise (flash) attention kernel: causal / sliding-window GQA.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) with the KV axis as
+the innermost (sequential) dimension; online-softmax running statistics
+(m, l) and the unnormalized accumulator live in VMEM scratch across KV
+steps, and the normalized tile is written on the last KV block.
+
+Tiles are MXU-aligned (BLOCK_Q x D and BLOCK_K x D with D a multiple of
+128 on TPU; the interpret-mode tests sweep smaller shapes). GQA is
+handled in the index maps: query head h reads KV head h // group.
+Sliding-window masking (window W) skips the contribution of fully-masked
+blocks via @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int,
+                  causal: bool, window: int | None, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Block-level reachability: q_pos >= k_pos (causal) and
+    # q_pos - k_pos < window (SWA). Skip fully-masked blocks.
+    reachable = True
+    if causal:
+        reachable = q_start + block_q - 1 >= k_start
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)             # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        ok = k_pos < seq_k
+        if causal:
+            ok &= q_pos >= k_pos
+        if window is not None:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                             # (BQ, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, Hkv, Sk, D)
+    v: jax.Array,            # (B, Hkv, Sk, D)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, H, Sq, D). H must be a multiple of Hkv (GQA)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (sq + pad_q) // block_q
+    nk = (sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group:
+                         (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, g=group:
+                         (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),   # unnormalized acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

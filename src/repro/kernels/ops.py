@@ -1,0 +1,68 @@
+"""Jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) `interpret=True` is selected automatically so the
+kernels execute step-by-step in Python; on TPU the same call sites compile
+to Mosaic. Wrappers pick hardware-aligned default block shapes and accept
+pytrees where useful (``fedagg_tree``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fedagg import fedagg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_wkv import rwkv6_wkv
+from repro.kernels.selective_scan import selective_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def fedagg_op(stacked: jax.Array, weights: jax.Array,
+              block_p: int = 16_384) -> jax.Array:
+    return fedagg(stacked, weights, block_p=block_p, interpret=_on_cpu())
+
+
+def fedagg_tree(params_stacked, weights):
+    """Weighted aggregation over a satellite-stacked pytree via the fused
+    kernel: flatten -> one kernel pass -> unflatten."""
+    leaves, treedef = jax.tree.flatten(params_stacked)
+    s = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(s, -1).astype(jnp.float32) for l in leaves], axis=1)
+    agg = fedagg_op(flat, weights.astype(jnp.float32))
+    out = []
+    ofs = 0
+    for l in leaves:
+        n = int(np.prod(l.shape[1:]))
+        out.append(agg[ofs:ofs + n].reshape(l.shape[1:]).astype(l.dtype))
+        ofs += n
+    return jax.tree.unflatten(treedef, out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q",
+                                    "block_k"))
+def flash_attention_op(q, k, v, causal: bool = True,
+                       window: int | None = None,
+                       block_q: int = 128, block_k: int = 128):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def selective_scan_op(abar, bx, c, chunk: int = 64, block_d: int = 256):
+    return selective_scan(abar, bx, c, chunk=chunk, block_d=block_d,
+                          interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv_op(r, k, v, w, u, chunk: int = 64):
+    return rwkv6_wkv(r, k, v, w, u, chunk=chunk, interpret=_on_cpu())

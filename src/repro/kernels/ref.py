@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fedagg_ref(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    """out[p] = sum_s w[s] x[s, p]."""
+    return jnp.einsum("s,sp->p", weights.astype(jnp.float32),
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """Dense-softmax GQA attention. q (B,H,Sq,D), k/v (B,Hkv,Sk,D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(abar, bx, c):
+    """Sequential reference of the SSM recurrence. (B,S,D,N) -> (B,S,D)."""
+    b, s, d, n = abar.shape
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(abar, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(bx, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(c, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(y, 0, 1).astype(abar.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, w, u):
+    """Sequential reference of the WKV6 recurrence. (B,H,S,N) -> same."""
+    b, h, s, n = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t,
+                       state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    mv = lambda a: jnp.moveaxis(a, 2, 0).astype(jnp.float32)
+    _, y = jax.lax.scan(step, s0, (mv(r), mv(k), mv(v), mv(w)))
+    return jnp.moveaxis(y, 0, 2).astype(r.dtype)

@@ -1,0 +1,76 @@
+"""Mamba selective-scan kernel: chunked recurrence with VMEM-resident state.
+
+    h_t = abar_t * h_{t-1} + bx_t          (per channel d, state n)
+    y_t = sum_n h_t[d, n] * c_t[n]
+
+Grid: (batch, channel_blocks, seq_chunks); the sequence axis is the
+innermost (sequential) grid dimension — the SSM state h (BLOCK_D, N)
+persists in VMEM scratch across chunks, so HBM traffic is exactly one
+pass over the inputs (the TPU adaptation of Mamba's SRAM-resident scan).
+Within a chunk the recurrence runs as an unrolled VPU loop over time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(abar_ref, bx_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    abar = abar_ref[0].astype(jnp.float32)     # (chunk, BD, N)
+    bx = bx_ref[0].astype(jnp.float32)         # (chunk, BD, N)
+    c = c_ref[0].astype(jnp.float32)           # (chunk, N)
+
+    h = h_scr[...]                             # (BD, N)
+    ys = []
+    for t in range(chunk):                     # unrolled VPU recurrence
+        h = abar[t] * h + bx[t]
+        ys.append(jnp.sum(h * c[t][None, :], axis=1))   # (BD,)
+    h_scr[...] = h
+    y_ref[0] = jnp.stack(ys, axis=0).astype(y_ref.dtype)   # (chunk, BD)
+
+
+def selective_scan(
+    abar: jax.Array,     # (B, S, D, N)
+    bx: jax.Array,       # (B, S, D, N)
+    c: jax.Array,        # (B, S, N)
+    chunk: int = 64,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, S, D)."""
+    b, s, d, n = abar.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    block_d = min(block_d, d)
+    assert d % block_d == 0, (d, block_d)
+    nc = s // chunk
+    nd = d // block_d
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda bi, di, ci: (bi, ci, di, 0)),
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda bi, di, ci: (bi, ci, di, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d),
+                               lambda bi, di, ci: (bi, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), abar.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(abar, bx, c)
+    return y

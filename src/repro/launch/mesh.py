@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init,
+while tests and benches keep the single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.dissemination import ConstellationMeshMap
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_constellation_map(*, multi_pod: bool = False) -> ConstellationMeshMap:
+    """DESIGN.md §8: 4 orbits x 4 satellites per pod, one HAP per pod."""
+    return ConstellationMeshMap(
+        n_orbits=4, sats_per_orbit=4, n_pods=2 if multi_pod else 1)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2,
+                    multi_pod: bool = False) -> Mesh:
+    """Small mesh for CPU integration tests (8 forced host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,75 @@
+"""Serving driver: batched greedy decoding of a (reduced) architecture.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_configs
+from repro.data.tokens import TokenTaskConfig, make_token_dataset
+from repro.models.transformer import Transformer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_configs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--window", action="store_true",
+                    help="serve through the sliding-window cache")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(args.seed))
+
+    tok_cfg = TokenTaskConfig(vocab_size=cfg.vocab_size, seed=3)
+    prompts = np.stack([
+        make_token_dataset(args.prompt_len, tok_cfg, client=i)
+        for i in range(args.batch)
+    ])
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_len, use_window=args.window)
+    if cfg.is_encdec:
+        frames = jax.random.normal(
+            jax.random.key(1), (args.batch, cfg.encoder_seq, cfg.d_model))
+        cache = model.prime_encdec(params, cache, frames)
+
+    step = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, use_window=args.window))
+
+    t0 = time.time()
+    # prefill by stepping the prompt (cache-correct for all families)
+    tok = jnp.asarray(prompts[:, 0])
+    generated = [np.asarray(prompts[:, 0])]
+    for i in range(1, max_len):
+        logits, cache = step(params, cache, tok)
+        if i < args.prompt_len:
+            tok = jnp.asarray(prompts[:, i])
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(np.asarray(tok))
+    dt = time.time() - t0
+    out = np.stack(generated, axis=1)
+    print(f"[serve] {cfg.name}: {args.batch} seqs x {max_len} steps in "
+          f"{dt:.2f}s ({args.batch * max_len / dt:.1f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: prompt={out[b, :args.prompt_len].tolist()} "
+              f"gen={out[b, args.prompt_len:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs (no device
+allocation) — the dry-run lowers `train_step`/`serve_step` against them.
+
+Shape semantics (assignment):
+  train_4k     -> train_step   (FedHAP round: local SGD + hierarchical agg)
+  prefill_32k  -> prefill_step (global model forward, batch over data)
+  decode_32k   -> serve_step   (1 token against a seq_len KV/state cache)
+  long_500k    -> serve_step   (sub-quadratic path: native state/latent or
+                                sliding-window per DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.core.dissemination import ConstellationMeshMap
+from repro.core.fed_step import FedTrainConfig, build_fed_train_step
+from repro.core.mesh_round import FedRoundConfig
+from repro.launch.mesh import make_constellation_map
+from repro.models.transformer import Transformer
+
+
+def _lead(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def sanitize_specs(example: Any, specs: Any, mesh: Mesh) -> Any:
+    """jit *argument* shardings must divide evenly (GSPMD only pads
+    intermediates). Where a dim sharded over `model` isn't divisible by
+    the axis size (51865-row vocab tables, 8-kv-head caches, ...), move
+    the `model` sharding to the first unsharded divisible dim, else drop
+    it. Deterministic, shape-driven — recorded per-leaf in the dry-run.
+    """
+    msize = mesh.shape["model"]
+
+    def fix(x, s):
+        parts = list(s)
+        shape = x.shape
+        offset = len(parts) - len(shape)  # leading prefix entries (sat dim)
+        for i, ax in enumerate(parts):
+            if ax != "model" or i < offset:
+                continue
+            dim = shape[i - offset]
+            if dim % msize == 0:
+                continue
+            parts[i] = None
+            for j in range(len(shape)):
+                if (shape[j] % msize == 0 and shape[j] >= msize
+                        and parts[offset + j] is None):
+                    parts[offset + j] = "model"
+                    break
+        return P(*parts)
+
+    return jax.tree.map(fix, example, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp(multi_pod: bool, batch: int, mesh: Mesh):
+    """Batch-dim sharding for serving; None when batch can't shard."""
+    axes = _lead(multi_pod)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch % n == 0:
+        return axes
+    if batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+# ------------------------------------------------------------- inputs
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      cmap: ConstellationMeshMap) -> dict:
+    """Satellite-stacked training batch for one FedHAP round."""
+    s = cmap.total_sats
+    assert shape.global_batch % s == 0
+    lb = shape.global_batch // s
+    seq = shape.seq_len
+    f32 = jnp.float32
+    batch: dict[str, Any] = {}
+    if cfg.vision_patches:
+        text = seq - cfg.vision_patches
+        batch["tokens"] = jax.ShapeDtypeStruct((s, lb, text), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((s, lb, text), jnp.int32)
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (s, lb, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((s, lb, seq), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((s, lb, seq), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (s, lb, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return {
+        "batch": batch,
+        "sizes": jax.ShapeDtypeStruct((s,), f32),
+        "visible": jax.ShapeDtypeStruct((s,), jnp.bool_),
+    }
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, seq = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+    if cfg.vision_patches:
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, seq - cfg.vision_patches), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       model: Transformer, use_window: bool) -> dict:
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len, use_window=use_window,
+                                 dtype=jnp.bfloat16))
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def use_window_for(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    """long_500k decodes through SWA for archs without a native
+    sub-quadratic path (DESIGN.md §4)."""
+    return shape.name == "long_500k" and cfg.long_context_mode == "swa"
+
+
+# ------------------------------------------------------------ builders
+def make_train_step(model: Transformer, mesh: Mesh,
+                    round_kind: str = "fedhap",
+                    partial_mode: str = "paper",
+                    hap_ring: bool = True,
+                    ship_global_echo: bool = True,
+                    local_steps: int = 1):
+    multi_pod = "pod" in mesh.axis_names
+    cmap = make_constellation_map(multi_pod=multi_pod)
+    fed_cfg = FedTrainConfig(
+        round_cfg=FedRoundConfig(cmap=cmap, partial_mode=partial_mode,
+                                 hap_ring=hap_ring,
+                                 ship_global_echo=ship_global_echo),
+        round_kind=round_kind,
+        local_steps=local_steps,
+    )
+    example_one = jax.eval_shape(
+        lambda: model.init(jax.random.key(0), jnp.bfloat16))
+    trailing = sanitize_specs(example_one, model.specs(), mesh)
+    step = build_fed_train_step(model, fed_cfg, mesh, model_specs=trailing)
+
+    lead = _lead(multi_pod)
+    pspec = jax.tree.map(lambda s: P(lead, *tuple(s)), trailing,
+                         is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    def batch_spec(x):
+        return NamedSharding(mesh, P(lead, *([None] * (len(x.shape) - 1))))
+
+    def shardings_for(specs):
+        return {
+            "batch": jax.tree.map(batch_spec, specs["batch"]),
+            "sizes": NamedSharding(mesh, P(lead)),
+            "visible": NamedSharding(mesh, P(lead)),
+        }
+
+    return step, params_sh, shardings_for, cmap
+
+
+def make_prefill_step(model: Transformer, mesh: Mesh):
+    multi_pod = "pod" in mesh.axis_names
+
+    def prefill(params, inputs):
+        aux = {k: v for k, v in inputs.items()
+               if k in ("frames", "patches")}
+        logits, _ = model.forward(params, inputs["tokens"], aux or None)
+        # Return just the last-position logits (what serving needs).
+        return logits[:, -1, :]
+
+    pspec = model.specs(prefix=())
+    example = jax.eval_shape(
+        lambda: model.init(jax.random.key(0), jnp.bfloat16))
+    pspec = sanitize_specs(example, pspec, mesh)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    def shardings_for(specs, batch):
+        dp = _dp(multi_pod, batch, mesh)
+        return jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(dp, *([None] * (len(x.shape) - 1)))), specs)
+
+    return prefill, params_sh, shardings_for
+
+
+def make_serve_step(model: Transformer, mesh: Mesh, use_window: bool,
+                    long_ctx: bool):
+    multi_pod = "pod" in mesh.axis_names
+
+    def serve(params, cache, token):
+        logits, new_cache = model.decode_step(params, cache, token,
+                                              use_window=use_window)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    pspec = model.specs(prefix=())
+    example = jax.eval_shape(
+        lambda: model.init(jax.random.key(0), jnp.bfloat16))
+    pspec = sanitize_specs(example, pspec, mesh)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    def cache_shardings(batch: int, cache_example):
+        specs = model.cache_specs(use_window=use_window, long_ctx=long_ctx)
+        dp = _dp(multi_pod, batch, mesh)
+
+        def fix(spec):
+            # cache_specs leaves are prepended with the stacked-layer dim:
+            # parts[0] = layer stack (None), parts[1] = batch where the
+            # layout batch-shards. Replace `data` batch-sharding with the
+            # actual batch placement (drop when batch can't shard).
+            parts = list(spec)
+            if len(parts) > 1 and parts[1] == "data":
+                parts[1] = dp
+            return P(*parts)
+
+        specs = jax.tree.map(fix, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+        specs = sanitize_specs(cache_example, specs, mesh)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    def token_sharding(batch: int):
+        dp = _dp(multi_pod, batch, mesh)
+        return NamedSharding(mesh, P(dp))
+
+    return serve, params_sh, cache_shardings, token_sharding

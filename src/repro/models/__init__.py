@@ -1,0 +1,15 @@
+"""Model zoo: the ten assigned architectures + the paper's CNN/MLP.
+
+Everything is functional JAX: `init_params` builds a pytree, `forward` /
+`decode_step` are pure functions, and a parallel pytree of
+`jax.sharding.PartitionSpec`s describes how each leaf shards over the
+production mesh (see `repro.launch.mesh`).
+"""
+from repro.models.transformer import (
+    Transformer,
+    cross_entropy_loss,
+)
+from repro.models.cnn import CNN
+from repro.models.mlp import MLP
+
+__all__ = ["Transformer", "cross_entropy_loss", "CNN", "MLP"]

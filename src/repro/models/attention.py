@@ -1,0 +1,356 @@
+"""Attention: GQA (with qk-norm, RoPE, sliding-window) and MLA.
+
+Training/prefill runs a *blockwise* streaming-softmax attention (the pure
+jnp analogue of the Pallas flash kernel in `repro.kernels.flash_attention`)
+so the lowered HLO never materializes an S x S score tensor for long
+sequences. Decode attends one query token against a KV cache:
+
+- GQA full cache:     k/v (B, S_max, H_kv, D); for long contexts the cache
+  is sharded over the `data` mesh axis (flash-decoding style — the softmax
+  reductions become all-reduces under GSPMD).
+- GQA sliding window: rolling cache (B, W, H_kv, D) + absolute-position
+  slots; O(W) memory at any context length.
+- MLA: compressed latent cache (B, S, kv_lora + rope_dim) with the
+  absorbed-matrix decode (DeepSeek-V2 trick), so 512k tokens ~ 0.3 GB.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rms_norm_headwise
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+# ================================================================= GQA
+def gqa_defs(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamDef((d, h * dh), axes=(None, "model")),
+        "wk": ParamDef((d, hkv * dh), axes=(None, "model")),
+        "wv": ParamDef((d, hkv * dh), axes=(None, "model")),
+        "wo": ParamDef((h * dh, d), axes=("model", None)),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ParamDef((dh,), "ones", axes=(None,))
+        p["k_norm"] = ParamDef((dh,), "ones", axes=(None,))
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    """-> q (B,Sq,Hkv,G,D), k,v (B,Sk,Hkv,D)."""
+    b, sq, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = (x @ p["wq"]).reshape(b, sq, hkv, g, dh)
+    k = (src @ p["wk"]).reshape(b, sk, hkv, dh)
+    v = (src @ p["wv"]).reshape(b, sk, hkv, dh)
+    if "q_norm" in p:
+        q = rms_norm_headwise(q, p["q_norm"])
+        k = rms_norm_headwise(k, p["k_norm"])
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Sq, Sk) additive bias from position-wise validity (1-D positions)."""
+    diff = q_pos[:, None].astype(jnp.int32) - k_pos[None, :].astype(jnp.int32)
+    ok = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, scale):
+    """q (B,Sq,Hkv,G,D), k/v (B,Sk,Hkv,D), bias (Sq,Sk)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def attention_forward(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_x: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill), blockwise over queries.
+
+    x: (B, S, d_model); positions: (S,) absolute positions.
+    kv_x: encoder states for cross-attention (then causal=False).
+    unroll: Python-unroll the query-chunk loop (used by the roofline
+    per-component compiles, where `lax.scan` would hide trip counts from
+    XLA's cost analysis).
+    """
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    q, k, v = _project_qkv(cfg, p, x, kv_x)
+    k_pos = positions if kv_positions is None else kv_positions
+    if cfg.use_rope and kv_x is None:
+        q = apply_rope(q.reshape(b, s, hkv * g, dh), positions,
+                       cfg.rope_theta).reshape(b, s, hkv, g, dh)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(dh)
+
+    chunk = cfg.attn_chunk_q
+    if s <= chunk or s % chunk != 0:
+        bias = _mask_bias(positions, k_pos, causal, window)
+        out = _sdpa(q, k, v, bias, scale)
+    else:
+        n = s // chunk
+        qc = q.reshape(b, n, chunk, hkv, g, dh)
+        pc = positions.reshape(n, chunk)
+
+        def body(carry, inputs):
+            qi, pi = inputs
+            bias = _mask_bias(pi, k_pos, causal, window)
+            return carry, _sdpa(qi, k, v, bias, scale)
+
+        qcs = jnp.moveaxis(qc, 1, 0)
+        if unroll:
+            outs = jnp.stack(
+                [body(None, (qcs[i], pc[i]))[1] for i in range(n)], 0)
+        else:
+            _, outs = jax.lax.scan(body, None, (qcs, pc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, hkv, g, dh)
+    y = out.reshape(b, s, h * dh) @ p["wo"]
+    return y
+
+
+# --------------------------------------------------------------- caches
+def init_kv_cache(cfg: ArchConfig, batch: int, length: int,
+                  window: Optional[int], dtype) -> dict:
+    """Cache pytree for one attention layer stack entry."""
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    size = min(length, window) if window else length
+    return {
+        "k": jnp.zeros((batch, size, hkv, dh), dtype),
+        "v": jnp.zeros((batch, size, hkv, dh), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),  # absolute slot positions
+    }
+
+
+def kv_cache_specs(window: Optional[int], length: int, long_ctx: bool):
+    """PartitionSpecs for the cache: long full caches shard the sequence
+    dim over `data` (flash-decoding); windowed/short caches shard batch."""
+    from jax.sharding import PartitionSpec as P
+    if window is None and long_ctx:
+        return {"k": P(None, "data", "model", None),
+                "v": P(None, "data", "model", None),
+                "pos": P("data")}
+    return {"k": P("data", None, "model", None),
+            "v": P("data", None, "model", None),
+            "pos": P(None)}
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    p: dict,
+    x_t: jax.Array,            # (B, 1, d_model)
+    cache: dict,
+    idx: jax.Array,            # scalar int32: absolute position of x_t
+    window: Optional[int] = None,
+) -> tuple[jax.Array, dict]:
+    """One decode step against the (possibly rolling) KV cache."""
+    b = x_t.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    q, k_new, v_new = _project_qkv(cfg, p, x_t)
+    if cfg.use_rope:
+        pos1 = idx[None]
+        q = apply_rope(q.reshape(b, 1, h, dh), pos1,
+                       cfg.rope_theta).reshape(b, 1, hkv, g, dh)
+        k_new = apply_rope(k_new, pos1, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    slot = (idx if window is None else idx % size).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], idx[None], (slot,))
+    # Validity: slot filled, causal, and within the window if rolling.
+    ok = (pos >= 0) & (pos <= idx)
+    if window is not None:
+        ok &= pos > idx - window
+    bias = jnp.where(ok, 0.0, NEG_INF)[None, :]        # (1, Sk)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[:, None, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v).reshape(b, 1, h * dh)
+    return out @ p["wo"], {"k": k, "v": v, "pos": pos}
+
+
+def cross_attention_cache(cfg: ArchConfig, p: dict, enc: jax.Array) -> dict:
+    """Precompute encoder K/V once for decoder cross-attention."""
+    b, sk, _ = enc.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": (enc @ p["wk"]).reshape(b, sk, hkv, dh),
+        "v": (enc @ p["wv"]).reshape(b, sk, hkv, dh),
+    }
+
+
+def cross_attention_decode(cfg: ArchConfig, p: dict, x_t: jax.Array,
+                           xcache: dict) -> jax.Array:
+    b = x_t.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = (x_t @ p["wq"]).reshape(b, 1, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, xcache["k"],
+                        preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(xcache["v"].dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, xcache["v"]).reshape(b, 1, h * dh)
+    return out @ p["wo"]
+
+
+# ================================================================= MLA
+def mla_defs(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamDef((d, m.q_lora_rank), axes=(None, None)),
+        "q_norm": ParamDef((m.q_lora_rank,), "ones", axes=(None,)),
+        "w_uq": ParamDef((m.q_lora_rank, h * qd), axes=(None, "model")),
+        "w_dkv": ParamDef((d, m.kv_lora_rank), axes=(None, None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), "ones", axes=(None,)),
+        "w_uk": ParamDef((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                         axes=(None, "model")),
+        "w_uv": ParamDef((m.kv_lora_rank, h * m.v_head_dim),
+                         axes=(None, "model")),
+        "w_kr": ParamDef((d, m.qk_rope_head_dim), axes=(None, None)),
+        "wo": ParamDef((h * m.v_head_dim, d), axes=("model", None)),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _mla_q(cfg, p, x):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = _rms(x @ p["w_dq"], p["q_norm"])
+    q = (cq @ p["w_uq"]).reshape(b, s, h, qd)
+    return jnp.split(q, [m.qk_nope_head_dim], axis=-1)  # nope, rope
+
+
+def mla_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                positions: jax.Array, unroll: bool = False) -> jax.Array:
+    """Training/prefill MLA with expanded K/V (blockwise over queries)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(cfg, p, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = _rms(x @ p["w_dkv"], p["kv_norm"])            # (B,S,dc)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                  # (B,S,1,rope)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope], -1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    chunk = cfg.attn_chunk_q
+    def attend(qi, pi):
+        bias = _mask_bias(pi, positions, True, None)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = scores + bias[None, None]
+        w = jax.nn.softmax(scores, -1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    if s <= chunk or s % chunk != 0:
+        out = attend(q, positions)
+    else:
+        n = s // chunk
+        qc = jnp.moveaxis(q.reshape(b, n, chunk, h, -1), 1, 0)
+        pc = positions.reshape(n, chunk)
+        if unroll:
+            outs = jnp.stack([attend(qc[i], pc[i]) for i in range(n)], 0)
+        else:
+            _, outs = jax.lax.scan(
+                lambda c, inp: (c, attend(*inp)), None, (qc, pc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, m.v_head_dim)
+    return out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, length: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, length, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, length, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def mla_cache_specs(long_ctx: bool = False):
+    from jax.sharding import PartitionSpec as P
+    if long_ctx:
+        # Latents are tiny: shard the sequence over `data` at 512k ctx.
+        return {"c_kv": P(None, "data", None),
+                "k_rope": P(None, "data", None),
+                "pos": P("data")}
+    return {"c_kv": P("data", None, None),
+            "k_rope": P("data", None, None),
+            "pos": P(None)}
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x_t: jax.Array, cache: dict,
+               idx: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed-matrix MLA decode over the compressed latent cache."""
+    m = cfg.mla
+    b = x_t.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(cfg, p, x_t)                 # (B,1,H,*)
+    q_rope = apply_rope(q_rope, idx[None], cfg.rope_theta)
+    c_new = _rms(x_t @ p["w_dkv"], p["kv_norm"])          # (B,1,dc)
+    kr_new = apply_rope((x_t @ p["w_kr"])[:, :, None, :], idx[None],
+                        cfg.rope_theta)[:, :, 0, :]       # (B,1,rope)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, idx, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new,
+                                          (0, idx, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"],
+                                       idx[None].astype(jnp.int32), (idx,))
+    # Absorb W_uk into the query:  q_eff[b,h,c] = sum_n q_nope w_uk[c,h,n].
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bhn,chn->bhc", q_nope[:, 0], w_uk)
+    scores = (
+        jnp.einsum("bhc,bsc->bhs", q_eff.astype(jnp.float32),
+                   c_kv.astype(jnp.float32))
+        + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    ok = (pos >= 0) & (pos <= idx)
+    scores = jnp.where(ok[None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, -1)
+    ctx = jnp.einsum("bhs,bsc->bhc", w, c_kv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhc,chv->bhv", ctx, w_uv.astype(jnp.float32))
+    y = out.reshape(b, 1, h * m.v_head_dim).astype(x_t.dtype) @ p["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "pos": pos}

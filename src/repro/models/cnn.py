@@ -1,0 +1,68 @@
+"""The paper's CNN (McMahan-style FL-MNIST CNN) in pure JAX.
+
+conv5x5x32 -> maxpool2 -> conv5x5x64 -> maxpool2 -> fc512 -> fc10.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import PaperCnnConfig
+from repro.models.params import ParamDef, init_params, param_count
+
+
+class CNN:
+    def __init__(self, cfg: PaperCnnConfig):
+        self.cfg = cfg
+
+    def defs(self) -> dict:
+        c = self.cfg
+        c1, c2 = c.channels
+        k = c.kernel
+        flat = (c.image_size // 4) ** 2 * c2
+        return {
+            "conv1_w": ParamDef((k, k, 1, c1), scale=0.1),
+            "conv1_b": ParamDef((c1,), "zeros"),
+            "conv2_w": ParamDef((k, k, c1, c2), scale=0.05),
+            "conv2_b": ParamDef((c2,), "zeros"),
+            "fc1_w": ParamDef((flat, c.hidden)),
+            "fc1_b": ParamDef((c.hidden,), "zeros"),
+            "fc2_w": ParamDef((c.hidden, c.num_classes)),
+            "fc2_b": ParamDef((c.num_classes,), "zeros"),
+        }
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        return init_params(self.defs(), key, dtype)
+
+    def count_params(self) -> int:
+        return param_count(self.defs())
+
+    def forward(self, p: dict, images: jax.Array) -> jax.Array:
+        """images: (B, 28, 28) -> logits (B, 10)."""
+        x = images[..., None]                           # NHWC
+        x = jax.lax.conv_general_dilated(
+            x, p["conv1_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["conv1_b"])
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jax.lax.conv_general_dilated(
+            x, p["conv2_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["conv2_b"])
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
+        return x @ p["fc2_w"] + p["fc2_b"]
+
+    def loss(self, p: dict, images: jax.Array, labels: jax.Array):
+        logits = self.forward(p, images)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    def accuracy(self, p: dict, images: jax.Array, labels: jax.Array):
+        return jnp.mean(
+            (jnp.argmax(self.forward(p, images), -1) == labels).astype(
+                jnp.float32))

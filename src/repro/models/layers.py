@@ -1,0 +1,97 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding tables."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------- norms
+def norm_def(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), "ones", axes=(None,))}
+    if kind == "layernorm":
+        return {
+            "scale": ParamDef((d,), "ones", axes=(None,)),
+            "bias": ParamDef((d,), "zeros", axes=(None,)),
+        }
+    raise ValueError(kind)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_headwise(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    """qk-norm: RMS-normalize the last (head) dim (Qwen3-style)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,d/2)
+    cos = jnp.cos(angles)[..., :, None, :]             # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def mlp_def(d_model: int, d_ff: int, act: str) -> dict:
+    p = {
+        "w_up": ParamDef((d_model, d_ff), axes=(None, "model")),
+        "w_down": ParamDef((d_ff, d_model), axes=("model", None)),
+    }
+    if act == "silu":  # gated (SwiGLU)
+        p["w_gate"] = ParamDef((d_model, d_ff), axes=(None, "model"))
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "silu":
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        up = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------- embed
+def embed_def(vocab: int, d_model: int) -> dict:
+    return {"table": ParamDef((vocab, d_model), scale=0.02,
+                              axes=("model", None))}
+
+
+def apply_embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits via the (possibly tied) embedding table: (..., d) -> (..., V)."""
+    return x @ table.T

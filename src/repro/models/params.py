@@ -1,0 +1,97 @@
+"""Parameter-definition trees.
+
+A model describes its parameters once as a nested dict of `ParamDef`s
+(shape + initializer + partition spec); `init_params` materializes the
+pytree and `param_specs` extracts the matching `PartitionSpec` tree. This
+keeps sharding co-located with shapes — the single source of truth the
+launcher, checkpointing, and FedHAP aggregation all read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter tensor: shape, init scheme, logical partition axes."""
+    shape: tuple[int, ...]
+    init: str = "normal"       # normal | zeros | ones | uniform_conv | custom
+    scale: float | None = None  # stddev for normal; fan-in default if None
+    axes: tuple[str | None, ...] | None = None  # partition axis per dim
+
+    def pspec(self) -> P:
+        if self.axes is None:
+            return P(*([None] * len(self.shape)))
+        assert len(self.axes) == len(self.shape), (self.axes, self.shape)
+        return P(*self.axes)
+
+
+def _init_leaf(d: ParamDef, key: jax.Array, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        scale = d.scale
+        if scale is None:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    if d.init == "constant":
+        return jnp.full(d.shape, d.scale or 0.0, dtype)
+    if d.init == "s4d_a_log":
+        # S4D-real: A_log[c, n] = log(n + 1); broadcast over channels.
+        n = d.shape[-1]
+        row = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(row, d.shape).astype(dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize a ParamDef tree into arrays with split PRNG keys."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(tree: Any, prefix: tuple[str | None, ...] = ()) -> Any:
+    """PartitionSpec pytree; `prefix` prepends axes (e.g. the satellite
+    replica dim sharded over "data")."""
+    return jax.tree.map(
+        lambda d: P(*prefix, *d.pspec()), tree, is_leaf=is_def
+    )
+
+
+def param_count(tree: Any) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    total = 0
+    for l in leaves:
+        shape = l.shape if is_def(l) else l.shape
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def param_bytes(tree: Any, bytes_per_param: int = 2) -> int:
+    return param_count(tree) * bytes_per_param
+
+
+def add_leading_axis(tree: Any, n: int) -> Any:
+    """Stack-definition helper: prepend a dimension of size n (e.g. layers)
+    to every ParamDef in the subtree; the new dim is unsharded."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, d.init, d.scale,
+                           (None,) + tuple(d.axes or [None] * len(d.shape))),
+        tree, is_leaf=is_def,
+    )

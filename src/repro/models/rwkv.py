@@ -1,0 +1,242 @@
+"""RWKV-6 ("Finch") time-mix + channel-mix blocks.
+
+Data-dependent per-channel decay (the Finch contribution): the wkv state
+S (per head, head_size x head_size) evolves as
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,    w_t = exp(-exp(wx_t))
+with token-shift dynamic mixing (ddlerp) producing r/k/v/w/g streams.
+
+Training/prefill runs a chunked scan: `lax.scan` over sequence chunks,
+within-chunk work expressed as dense einsums against per-step decay
+prefix-products (the same blocking as the `rwkv6_wkv` Pallas kernel).
+Decode carries (S, x_prev) — O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+_STREAMS = 5  # r, k, v, w, g
+
+
+def rwkv_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    return {
+        "mu": ParamDef((_STREAMS, d), "normal", scale=0.02,
+                       axes=(None, None)),
+        "mix_w1": ParamDef((d, _STREAMS * r.lora_rank_mix), scale=0.02,
+                           axes=(None, None)),
+        "mix_w2": ParamDef((_STREAMS, r.lora_rank_mix, d), scale=0.02,
+                           axes=(None, None, "model")),
+        "w_r": ParamDef((d, d), axes=(None, "model")),
+        "w_k": ParamDef((d, d), axes=(None, "model")),
+        "w_v": ParamDef((d, d), axes=(None, "model")),
+        "w_g": ParamDef((d, d), axes=(None, "model")),
+        "w_o": ParamDef((d, d), axes=("model", None)),
+        "decay_base": ParamDef((d,), "constant", scale=-6.0, axes=(None,)),
+        "decay_w1": ParamDef((d, r.lora_rank_decay), scale=0.02,
+                             axes=(None, None)),
+        "decay_w2": ParamDef((r.lora_rank_decay, d), scale=0.02,
+                             axes=(None, "model")),
+        "bonus_u": ParamDef((d,), "constant", scale=0.5, axes=(None,)),
+        "ln_scale": ParamDef((d,), "ones", axes=(None,)),
+        "ln_bias": ParamDef((d,), "zeros", axes=(None,)),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Dynamic token-shift: five mixed streams. -> (5, B, S, d)."""
+    lxx = x_prev - x
+    xxx = x + lxx * p["mu"][3]  # use the w-stream mu as the probe (RWKV6)
+    probe = jnp.tanh(xxx @ p["mix_w1"])            # (B,S,5*rank)
+    b, s, _ = x.shape
+    probe = probe.reshape(b, s, _STREAMS, -1)
+    dyn = jnp.einsum("bsfr,frd->fbsd", probe, p["mix_w2"])
+    return x[None] + lxx[None] * (p["mu"][:, None, None] + dyn)
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """w_t in (0,1): exp(-exp(base + lora(xw))). xw: (B,S,d)."""
+    wx = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return jnp.exp(-jnp.exp(wx.astype(jnp.float32)))
+
+
+def _group_norm(x: jax.Array, scale, bias, heads: int, eps=1e-5):
+    """Per-head layernorm on (B, S, d) grouped into heads."""
+    b, s, d = x.shape
+    xg = x.reshape(b, s, heads, d // heads).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, s, d) * scale + bias).astype(x.dtype)
+
+
+def _wkv_chunk(s0, r_c, k_c, v_c, w_c, u):
+    """Within-chunk wkv via prefix decay products.
+
+    s0: (B,H,N,N) carry; r/k/v/w: (B,C,H,N); u: (H,N).
+    Returns (y_c (B,C,H,N), s_new).
+
+    Using decay prefix P_t = prod_{i<=t} w_i (inclusive):
+      contribution of state: y_t += r_t^T (diag(P_{t-1}) ... ) — we fold
+      per-step decays into keys/queries:  k~_i = k_i / P_i,  r~_t = r_t*P_{t-1}
+      then S-part y_t = r~_t^T sum_{i<t} k~_i v_i^T + intra-step bonus.
+    Numerical note: P can underflow for long chunks; chunks are short
+    (<=128) and w in (0,1) with typical values near 1, and we clamp.
+    """
+    bsz, c, h, n = r_c.shape
+    logw = jnp.log(jnp.clip(w_c.astype(jnp.float32), 1e-38, 1.0))
+    logp = jnp.cumsum(logw, axis=1)                  # inclusive prefix
+    p_incl = jnp.exp(jnp.clip(logp, -60.0, 0.0))     # P_t
+    p_excl = jnp.exp(jnp.clip(logp - logw, -60.0, 0.0))  # P_{t-1}
+    r32 = r_c.astype(jnp.float32)
+    k32 = k_c.astype(jnp.float32)
+    v32 = v_c.astype(jnp.float32)
+    r_tilde = r32 * p_excl
+    k_tilde = k32 / jnp.maximum(p_incl, 1e-30)
+    # Cross-step (strictly lower-triangular) attention-like term.
+    att = jnp.einsum("bthn,bshn->bhts", r_tilde, k_tilde)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    att = att * tri[None, None]
+    y = jnp.einsum("bhts,bshn->bthn", att, v32)
+    # Carry-in state term: y_t += (diag-decayed S0) applied to r~.
+    y = y + jnp.einsum("bthn,bhnm->bthm", r_tilde, s0)
+    # Intra-step bonus: u ⊙ k_t.
+    y = y + jnp.sum(r32 * (u[None, None] * k32), axis=-1, keepdims=True) * v32
+    # New state: S = diag(P_C) S0 + sum_i diag(P_C/P_i) k_i v_i^T.
+    decay_to_end = jnp.exp(jnp.clip(logp[:, -1:] - logp, -60.0, 0.0))
+    s_new = p_incl[:, -1][..., None] * s0 + jnp.einsum(
+        "bshn,bshm->bhnm", k32 * decay_to_end, v32)
+    return y.astype(r_c.dtype), s_new
+
+
+def rwkv_time_mix(cfg: ArchConfig, p: dict, x: jax.Array,
+                  x_prev_last: jax.Array | None = None,
+                  s0: jax.Array | None = None,
+                  unroll_chunks: bool = False) -> jax.Array:
+    """Full-sequence time-mix. x: (B, S, d)."""
+    r_cfg = cfg.rwkv
+    b, s, d = x.shape
+    h, n = cfg.rwkv_heads, r_cfg.head_size
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_prev_last is None
+         else x_prev_last[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["w_r"]).reshape(b, s, h, n)
+    k = (xk @ p["w_k"]).reshape(b, s, h, n)
+    v = (xv @ p["w_v"]).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(p, xw).reshape(b, s, h, n)
+    u = p["bonus_u"].reshape(h, n).astype(jnp.float32)
+
+    chunk = min(r_cfg.chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def one_chunk(carry, inputs):
+        rc, kc, vc, wc = inputs
+        y_c, s_new = _wkv_chunk(carry, rc, kc, vc, wc, u)
+        return s_new, y_c
+
+    split = lambda a: jnp.moveaxis(a.reshape(b, nc, chunk, h, n), 1, 0)
+    inputs = (split(r), split(k), split(v), split(w))
+    if unroll_chunks:
+        ys = []
+        carry = s0
+        for i in range(nc):
+            carry, y_c = one_chunk(carry, jax.tree.map(lambda a: a[i], inputs))
+            ys.append(y_c)
+        y = jnp.stack(ys, 0)
+    else:
+        carry, y = jax.lax.scan(one_chunk, s0, inputs)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, d)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], h)
+    return (y * g) @ p["w_o"]
+
+
+def channel_mix_defs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamDef((d,), "constant", scale=0.5, axes=(None,)),
+        "mu_r": ParamDef((d,), "constant", scale=0.5, axes=(None,)),
+        "w_k": ParamDef((d, f), axes=(None, "model")),
+        "w_v": ParamDef((f, d), axes=("model", None)),
+        "w_r": ParamDef((d, d), axes=(None, "model")),
+    }
+
+
+def rwkv_channel_mix(cfg: ArchConfig, p: dict, x: jax.Array,
+                     x_prev_last: jax.Array | None = None) -> jax.Array:
+    """RWKV FFN with token shift and squared-relu."""
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_prev_last is None
+         else x_prev_last[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    h, n = cfg.rwkv_heads, cfg.rwkv.head_size
+    d = cfg.d_model
+    return {
+        "s": jnp.zeros((batch, h, n, n), jnp.float32),
+        "x_prev_tm": jnp.zeros((batch, d), dtype),   # time-mix shift state
+        "x_prev_cm": jnp.zeros((batch, d), dtype),   # channel-mix shift state
+    }
+
+
+def rwkv_cache_specs():
+    from jax.sharding import PartitionSpec as P
+    return {"s": P("data", "model", None, None),
+            "x_prev_tm": P("data", None),
+            "x_prev_cm": P("data", None)}
+
+
+def rwkv_decode(cfg: ArchConfig, p_tm: dict, p_cm: dict, x_t: jax.Array,
+                cache: dict) -> tuple[jax.Array, jax.Array, dict]:
+    """One token through time-mix (returns y_tm) and channel-mix helper.
+
+    x_t: (B, 1, d). Returns (y_time_mix, new_cache_part). The transformer
+    assembly applies norms/residuals and calls channel mix separately.
+    """
+    r_cfg = cfg.rwkv
+    b, _, d = x_t.shape
+    h, n = cfg.rwkv_heads, r_cfg.head_size
+    x = x_t[:, 0]
+    x_prev = cache["x_prev_tm"]
+    xs = _ddlerp(p_tm, x[:, None], x_prev[:, None])     # (5, B, 1, d)
+    xr, xk, xv, xw, xg = [a[:, 0] for a in xs]
+    r = (xr @ p_tm["w_r"]).reshape(b, h, n).astype(jnp.float32)
+    k = (xk @ p_tm["w_k"]).reshape(b, h, n).astype(jnp.float32)
+    v = (xv @ p_tm["w_v"]).reshape(b, h, n).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p_tm["w_g"])
+    w = _decay(p_tm, xw[:, None])[:, 0].reshape(b, h, n)
+    u = p_tm["bonus_u"].reshape(h, n).astype(jnp.float32)
+    s = cache["s"]
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    y = jnp.einsum("bhn,bhnm->bhm", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    y = y.reshape(b, 1, d).astype(x_t.dtype)
+    y = _group_norm(y, p_tm["ln_scale"], p_tm["ln_bias"], h)
+    y_tm = (y * g[:, None]) @ p_tm["w_o"]
+    new_cache = dict(cache)
+    new_cache["s"] = s_new
+    new_cache["x_prev_tm"] = x
+    return y_tm, new_cache
+
+
+def rwkv_channel_mix_decode(cfg: ArchConfig, p: dict, x_t: jax.Array,
+                            x_prev: jax.Array) -> jax.Array:
+    x = x_t[:, 0]
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return (jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]))[:, None]

@@ -1,0 +1,150 @@
+"""Mamba selective-SSM block (Jamba's mixer) — chunked parallel scan.
+
+Training/prefill uses a chunked formulation: `lax.scan` over sequence
+chunks carrying the SSM state, with a `lax.associative_scan` inside each
+chunk (log-depth, VMEM-sized working set — the same blocking the Pallas
+kernel `repro.kernels.selective_scan` uses on TPU). Decode is the O(1)
+recurrence h' = exp(dt A) h + dt B x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+
+def mamba_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner_mamba
+    m = cfg.mamba
+    dtr = cfg.dt_rank
+    return {
+        "in_proj": ParamDef((d, 2 * di), axes=(None, "model")),
+        "conv_w": ParamDef((m.d_conv, di), scale=0.5, axes=(None, "model")),
+        "conv_b": ParamDef((di,), "zeros", axes=("model",)),
+        "x_proj": ParamDef((di, dtr + 2 * m.d_state), axes=("model", None)),
+        "dt_proj": ParamDef((dtr, di), axes=(None, "model")),
+        "dt_bias": ParamDef((di,), "constant", scale=-4.6, axes=("model",)),
+        # A = -exp(A_log); init A_log = log(1..N) per state (S4D-real).
+        "a_log": ParamDef((di, m.d_state), "s4d_a_log", axes=("model", None)),
+        "d_skip": ParamDef((di,), "ones", axes=("model",)),
+        "out_proj": ParamDef((di, d), axes=("model", None)),
+    }
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, di), w: (K, di)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_j w[j] * x[t - (K-1) + j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + pad[:, j : j + x.shape[1], :] * w[j]
+    return out + b
+
+
+def _ssm_scan_chunked(abar, bx, c_t, h0, chunk: int, unroll: bool = False):
+    """h_t = abar_t * h_{t-1} + bx_t;  y_t = sum_N(h_t * c_t).
+
+    abar/bx: (B, S, di, N); c_t: (B, S, N); h0: (B, di, N).
+    Returns (y (B, S, di), h_final).
+    """
+    b, s, di, n = abar.shape
+    out_dtype = bx.dtype
+    # associative_scan needs uniform dtypes; run the recurrence in fp32.
+    abar = abar.astype(jnp.float32)
+    bx = bx.astype(jnp.float32)
+    c_t = c_t.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def one_chunk(h, inputs):
+        a_c, bx_c, c_c = inputs       # (B, chunk, di, N), (B, chunk, N)
+        cum_a, inner = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+        h_t = cum_a * h[:, None] + inner          # (B, chunk, di, N)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_t, c_c)
+        return h_t[:, -1], y_c
+
+    a_cs = jnp.moveaxis(abar.reshape(b, nc, chunk, di, n), 1, 0)
+    bx_cs = jnp.moveaxis(bx.reshape(b, nc, chunk, di, n), 1, 0)
+    c_cs = jnp.moveaxis(c_t.reshape(b, nc, chunk, n), 1, 0)
+    if unroll:
+        ys = []
+        h = h0
+        for i in range(nc):
+            h, y_c = one_chunk(h, (a_cs[i], bx_cs[i], c_cs[i]))
+            ys.append(y_c)
+        y = jnp.stack(ys, 0)
+    else:
+        h, y = jax.lax.scan(one_chunk, h0, (a_cs, bx_cs, c_cs))
+    return jnp.moveaxis(y, 0, 1).reshape(b, s, di).astype(out_dtype), h
+
+
+def mamba_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                  unroll_chunks: bool = False) -> jax.Array:
+    """Full-sequence Mamba mixer. x: (B, S, d_model)."""
+    m = cfg.mamba
+    b, s, _ = x.shape
+    di = cfg.d_inner_mamba
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_conv1d_causal(x_in, p["conv_w"], p["conv_b"]))
+    dbc = x_c @ p["x_proj"]
+    dt_raw, b_t, c_t = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + m.d_state],
+                                 axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,N)
+    abar = jnp.exp(dt[..., None] * a)                            # (B,S,di,N)
+    bx = (dt * x_c)[..., None] * b_t[:, :, None, :]              # (B,S,di,N)
+    h0 = jnp.zeros((b, di, m.d_state), abar.dtype)
+    y, _ = _ssm_scan_chunked(abar, bx, c_t, h0, m.chunk, unroll_chunks)
+    y = y + p["d_skip"] * x_c
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    m = cfg.mamba
+    di = cfg.d_inner_mamba
+    return {
+        "h": jnp.zeros((batch, di, m.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, m.d_conv, di), dtype),
+    }
+
+
+def mamba_cache_specs():
+    from jax.sharding import PartitionSpec as P
+    return {"h": P("data", "model", None), "conv": P("data", None, "model")}
+
+
+def mamba_decode(cfg: ArchConfig, p: dict, x_t: jax.Array, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    """One decode step. x_t: (B, 1, d_model)."""
+    m = cfg.mamba
+    b = x_t.shape[0]
+    xz = x_t[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # (B, di)
+    conv = jnp.concatenate([cache["conv"][:, 1:], x_in[:, None]], axis=1)
+    x_c = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", conv, p["conv_w"]) + p["conv_b"]
+    )
+    dbc = x_c @ p["x_proj"]
+    dt_raw, b_t, c_t = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + m.d_state],
+                                 axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B, di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(dt[..., None] * a)                       # (B, di, N)
+    h = abar * cache["h"] + ((dt * x_c)[..., None]
+                             * b_t[:, None, :]).astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h.astype(x_t.dtype), c_t)
+    y = y + p["d_skip"] * x_c
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out[:, None], {"h": h, "conv": conv}

@@ -1,0 +1,468 @@
+"""Transformer assembly for all ten assigned architectures.
+
+Layers are grouped into homogeneous *stacks* whose parameters are stacked
+along a leading dim and iterated with `lax.scan` — keeping the lowered HLO
+small regardless of depth (62-layer deepseek lowers the same module count
+as a 2-layer smoke model). Heterogeneous patterns (Jamba's 1-attn:7-mamba
+period) scan over periods with the period body unrolled.
+
+Decode mirrors the same stacks with per-layer caches stacked along the
+scan dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_embed,
+    apply_mlp,
+    apply_norm,
+    embed_def,
+    mlp_def,
+    norm_def,
+    unembed,
+)
+from repro.models.params import (
+    ParamDef,
+    add_leading_axis,
+    init_params,
+    param_count,
+    param_specs,
+)
+
+
+# ====================================================== block definitions
+def _block_defs(cfg: ArchConfig, kind: str, is_moe: bool,
+                cross: bool = False, bidir: bool = False) -> dict:
+    """ParamDef tree for one block of the given kind."""
+    d = {"norm1": norm_def(cfg.d_model, cfg.norm_kind)}
+    if kind == "attn":
+        d["mixer"] = (attn.mla_defs(cfg) if cfg.attention_kind == "mla"
+                      else attn.gqa_defs(cfg))
+    elif kind == "mamba":
+        d["mixer"] = ssm_lib.mamba_defs(cfg)
+    elif kind == "rwkv":
+        d["mixer"] = rwkv_lib.rwkv_defs(cfg)
+        d["norm2"] = norm_def(cfg.d_model, cfg.norm_kind)
+        d["cm"] = rwkv_lib.channel_mix_defs(cfg)
+        return d  # rwkv blocks carry their own FFN (channel mix)
+    else:
+        raise ValueError(kind)
+    if cross:
+        d["norm_x"] = norm_def(cfg.d_model, cfg.norm_kind)
+        d["xattn"] = attn.gqa_defs(cfg, cross=True)
+    d["norm2"] = norm_def(cfg.d_model, cfg.norm_kind)
+    if is_moe:
+        d["moe"] = moe_lib.moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_def(cfg.d_model, cfg.d_ff, cfg.act)
+    return d
+
+
+def _apply_block(cfg: ArchConfig, kind: str, is_moe: bool, p: dict,
+                 x: jax.Array, positions: jax.Array, *,
+                 causal: bool = True, window: Optional[int] = None,
+                 enc: Optional[jax.Array] = None,
+                 enc_positions: Optional[jax.Array] = None,
+                 unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """One block forward. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        x = x + rwkv_lib.rwkv_time_mix(
+            cfg, p["mixer"], apply_norm(p["norm1"], x, cfg.norm_kind),
+            unroll_chunks=unroll)
+        x = x + rwkv_lib.rwkv_channel_mix(
+            cfg, p["cm"], apply_norm(p["norm2"], x, cfg.norm_kind))
+        return x, aux
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            h = attn.mla_forward(cfg, p["mixer"], h, positions, unroll=unroll)
+        else:
+            h = attn.attention_forward(
+                cfg, p["mixer"], h, positions, causal=causal, window=window,
+                unroll=unroll)
+    elif kind == "mamba":
+        h = ssm_lib.mamba_forward(cfg, p["mixer"], h, unroll_chunks=unroll)
+    x = x + h
+    if enc is not None:
+        hx = apply_norm(p["norm_x"], x, cfg.norm_kind)
+        x = x + attn.attention_forward(
+            cfg, p["xattn"], hx, positions, causal=False, kv_x=enc,
+            kv_positions=enc_positions, unroll=unroll)
+    h2 = apply_norm(p["norm2"], x, cfg.norm_kind)
+    if is_moe:
+        y, aux = moe_lib.apply_moe(cfg, p["moe"], h2)
+        x = x + y
+    else:
+        x = x + apply_mlp(p["mlp"], h2, cfg.act)
+    return x, aux
+
+
+# ============================================================ assembly
+class Transformer:
+    """Functional model wrapper bound to an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        pat = cfg.block_pattern
+        if cfg.num_layers % len(pat) != 0:
+            raise ValueError(
+                f"{cfg.name}: layers {cfg.num_layers} not a multiple of "
+                f"pattern {pat}")
+        self.num_periods = cfg.num_layers // len(pat)
+        self.pattern = pat
+
+    # ------------------------------------------------------------ defs
+    def _period_defs(self) -> dict:
+        cfg = self.cfg
+        period = {}
+        for j, kind in enumerate(self.pattern):
+            period[f"b{j}"] = _block_defs(cfg, kind, cfg.layer_is_moe(j))
+        return period
+
+    def defs(self) -> dict:
+        cfg = self.cfg
+        d: dict[str, Any] = {
+            "embed": embed_def(cfg.vocab_size, cfg.d_model),
+            "final_norm": norm_def(cfg.d_model, cfg.norm_kind),
+            "layers": add_leading_axis(self._period_defs(), self.num_periods),
+        }
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((cfg.d_model, cfg.vocab_size), scale=0.02,
+                                 axes=(None, "model"))
+        if cfg.is_encdec:
+            enc_block = _block_defs(cfg, "attn", False, bidir=True)
+            d["encoder"] = {
+                "layers": add_leading_axis(enc_block, cfg.encoder_layers),
+                "final_norm": norm_def(cfg.d_model, cfg.norm_kind),
+            }
+            # Decoder blocks gain cross-attention.
+            dec_block = _block_defs(cfg, "attn", False, cross=True)
+            d["layers"] = add_leading_axis(dec_block, cfg.num_layers)
+        return d
+
+    def init(self, key: jax.Array, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return init_params(self.defs(), key, dtype)
+
+    def specs(self, prefix: tuple = ()):
+        return param_specs(self.defs(), prefix)
+
+    def count_params(self) -> int:
+        return param_count(self.defs())
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE counts top_k experts only)."""
+        cfg = self.cfg
+        total = param_count(self.defs())
+        if cfg.moe is None:
+            return total
+        m = cfg.moe
+        expert_p = 3 * cfg.d_model * m.d_ff_expert
+        n_moe_layers = sum(
+            1 for l in range(cfg.num_layers) if cfg.layer_is_moe(l))
+        total -= n_moe_layers * (m.num_experts - m.top_k) * expert_p
+        return total
+
+    # --------------------------------------------------------- forward
+    def forward(
+        self,
+        params: dict,
+        tokens: jax.Array,                     # (B, S_text)
+        aux_inputs: Optional[dict] = None,     # frames / patches stubs
+        unroll: bool = False,
+    ) -> tuple[jax.Array, jax.Array]:
+        """-> (logits (B, S, V), aux_loss scalar)."""
+        cfg = self.cfg
+        act_dtype = jnp.dtype(cfg.act_dtype)
+        x = apply_embed(params["embed"], tokens).astype(act_dtype)
+        if cfg.vision_patches and aux_inputs and "patches" in aux_inputs:
+            patches = aux_inputs["patches"].astype(act_dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        enc = enc_pos = None
+        if cfg.is_encdec:
+            enc = self._encode(params["encoder"], aux_inputs["frames"],
+                               unroll=unroll)
+            enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+
+        period_params = params["layers"]
+
+        def period_body(carry, pp):
+            h, aux = carry
+            if cfg.is_encdec:
+                h, a = _apply_block(cfg, "attn", False, pp, h, positions,
+                                    causal=True, enc=enc,
+                                    enc_positions=enc_pos, unroll=unroll)
+                return (h, aux + a), None
+            for j, kind in enumerate(self.pattern):
+                h, a = _apply_block(cfg, kind, cfg.layer_is_moe(j),
+                                    pp[f"b{j}"], h, positions,
+                                    unroll=unroll)
+                aux = aux + a
+            return (h, aux), None
+
+        body = period_body
+        if cfg.remat:
+            body = jax.checkpoint(period_body)
+        n_steps = (cfg.num_layers if cfg.is_encdec else self.num_periods)
+        if unroll:
+            carry = (x, jnp.zeros((), jnp.float32))
+            for i in range(n_steps):
+                carry, _ = body(carry, jax.tree.map(lambda a: a[i],
+                                                    period_params))
+            (x, aux) = carry
+        else:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), period_params)
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else None)
+        logits = (unembed(table, x) if table is not None
+                  else x @ params["head"])
+        return logits, aux
+
+    def _encode(self, enc_params: dict, frames: jax.Array,
+                unroll: bool = False) -> jax.Array:
+        """Whisper encoder over stub frame embeddings (bidirectional)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.act_dtype))
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(h, pp):
+            h, _ = _apply_block(cfg, "attn", False, pp, h, positions,
+                                causal=False, unroll=unroll)
+            return h, None
+
+        if unroll:
+            for i in range(cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                            enc_params["layers"]))
+        else:
+            x, _ = jax.lax.scan(body, x, enc_params["layers"])
+        return apply_norm(enc_params["final_norm"], x, cfg.norm_kind)
+
+    # ----------------------------------------------------------- decode
+    def _layer_window(self) -> Optional[int]:
+        cfg = self.cfg
+        return cfg.sliding_window if cfg.long_context_mode == "swa" else None
+
+    def init_cache(self, batch: int, max_len: int, use_window: bool = False,
+                   dtype=None) -> dict:
+        """Cache pytree for decode; stacked along the scan dim."""
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.act_dtype)
+        window = cfg.sliding_window if use_window else None
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n,) + l.shape), tree)
+
+        cache: dict[str, Any] = {"idx": jnp.zeros((), jnp.int32)}
+        if cfg.is_encdec:
+            cache["self"] = stack(
+                attn.init_kv_cache(cfg, batch, max_len, window, dtype),
+                cfg.num_layers)
+            # cross-attn cache filled by `prime_encdec`.
+            cache["cross"] = {
+                "k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+            return cache
+        period: dict[str, Any] = {}
+        for j, kind in enumerate(self.pattern):
+            if kind == "attn":
+                if cfg.attention_kind == "mla":
+                    period[f"b{j}"] = attn.init_mla_cache(
+                        cfg, batch, max_len, dtype)
+                else:
+                    period[f"b{j}"] = attn.init_kv_cache(
+                        cfg, batch, max_len, window, dtype)
+            elif kind == "mamba":
+                period[f"b{j}"] = ssm_lib.init_mamba_cache(cfg, batch, dtype)
+            elif kind == "rwkv":
+                period[f"b{j}"] = rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
+        cache["layers"] = stack(period, self.num_periods)
+        return cache
+
+    def cache_specs(self, use_window: bool = False, long_ctx: bool = False):
+        """PartitionSpec tree matching `init_cache`."""
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        window = cfg.sliding_window if use_window else None
+
+        def prepend(tree):
+            return jax.tree.map(lambda s: P(None, *s), tree)
+
+        specs: dict[str, Any] = {"idx": P()}
+        if cfg.is_encdec:
+            kv = attn.kv_cache_specs(window, 0, long_ctx)
+            specs["self"] = prepend(kv)
+            specs["cross"] = {
+                "k": P(None, "data", None, "model", None),
+                "v": P(None, "data", None, "model", None),
+            }
+            return specs
+        period = {}
+        for j, kind in enumerate(self.pattern):
+            if kind == "attn":
+                if cfg.attention_kind == "mla":
+                    period[f"b{j}"] = attn.mla_cache_specs(long_ctx)
+                else:
+                    period[f"b{j}"] = attn.kv_cache_specs(window, 0, long_ctx)
+            elif kind == "mamba":
+                period[f"b{j}"] = ssm_lib.mamba_cache_specs()
+            elif kind == "rwkv":
+                period[f"b{j}"] = rwkv_lib.rwkv_cache_specs()
+        specs["layers"] = prepend(period)
+        return specs
+
+    def prime_encdec(self, params: dict, cache: dict, frames: jax.Array
+                     ) -> dict:
+        """Run the encoder and fill the cross-attention caches."""
+        cfg = self.cfg
+        enc = self._encode(params["encoder"], frames)
+
+        def fill(pp):
+            return attn.cross_attention_cache(cfg, pp["xattn"], enc)
+
+        xc = jax.lax.map(fill, params["layers"])
+        cache = dict(cache)
+        cache["cross"] = xc
+        return cache
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    use_window: bool = False, unroll: bool = False
+                    ) -> tuple[jax.Array, dict]:
+        """One token for the whole stack. token: (B,) int32.
+
+        unroll: Python-unroll the layer scan (roofline per-component
+        compiles — XLA cost analysis does not multiply while bodies).
+        """
+        cfg = self.cfg
+        act_dtype = jnp.dtype(cfg.act_dtype)
+        idx = cache["idx"]
+        x = apply_embed(params["embed"], token[:, None]).astype(act_dtype)
+        window = cfg.sliding_window if use_window else None
+
+        if cfg.is_encdec:
+            def body(h, scanned):
+                pp, kv, xc = scanned
+                hin = apply_norm(pp["norm1"], h, cfg.norm_kind)
+                y, kv2 = attn.attention_decode(cfg, pp["mixer"], hin, kv,
+                                               idx, window)
+                h = h + y
+                hx = apply_norm(pp["norm_x"], h, cfg.norm_kind)
+                h = h + attn.cross_attention_decode(cfg, pp["xattn"], hx, xc)
+                h2 = apply_norm(pp["norm2"], h, cfg.norm_kind)
+                h = h + apply_mlp(pp["mlp"], h2, cfg.act)
+                return h, kv2
+
+            if unroll:
+                new_selfs = []
+                for i in range(cfg.num_layers):
+                    sl = jax.tree.map(lambda a: a[i],
+                                      (params["layers"], cache["self"],
+                                       cache["cross"]))
+                    x, ns = body(x, sl)
+                    new_selfs.append(ns)
+                new_self = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *new_selfs)
+            else:
+                x, new_self = jax.lax.scan(
+                    body, x,
+                    (params["layers"], cache["self"], cache["cross"]))
+            new_cache = dict(cache)
+            new_cache["self"] = new_self
+            new_cache["idx"] = idx + 1
+        else:
+            def body(h, scanned):
+                pp, cc = scanned
+                new_cc = {}
+                aux0 = jnp.zeros((), jnp.float32)
+                for j, kind in enumerate(self.pattern):
+                    pj, cj = pp[f"b{j}"], cc[f"b{j}"]
+                    hin = apply_norm(pj["norm1"], h, cfg.norm_kind)
+                    if kind == "attn":
+                        if cfg.attention_kind == "mla":
+                            y, c2 = attn.mla_decode(cfg, pj["mixer"], hin,
+                                                    cj, idx)
+                        else:
+                            y, c2 = attn.attention_decode(
+                                cfg, pj["mixer"], hin, cj, idx, window)
+                        h = h + y
+                    elif kind == "mamba":
+                        y, c2 = ssm_lib.mamba_decode(cfg, pj["mixer"], hin,
+                                                     cj)
+                        h = h + y
+                    elif kind == "rwkv":
+                        y, c2 = rwkv_lib.rwkv_decode(cfg, pj["mixer"],
+                                                     pj["cm"], hin, cj)
+                        h = h + y
+                        h2 = apply_norm(pj["norm2"], h, cfg.norm_kind)
+                        h = h + rwkv_lib.rwkv_channel_mix_decode(
+                            cfg, pj["cm"], h2, c2["x_prev_cm"])
+                        c2 = dict(c2)
+                        c2["x_prev_cm"] = h2[:, 0]
+                        new_cc[f"b{j}"] = c2
+                        continue
+                    if kind != "rwkv":
+                        h2 = apply_norm(pj["norm2"], h, cfg.norm_kind)
+                        if cfg.layer_is_moe(j):
+                            y2, _ = moe_lib.apply_moe(cfg, pj["moe"], h2)
+                            h = h + y2
+                        else:
+                            h = h + apply_mlp(pj["mlp"], h2, cfg.act)
+                    new_cc[f"b{j}"] = c2
+                return h, new_cc
+
+            if unroll:
+                new_ls = []
+                for i in range(self.num_periods):
+                    sl = jax.tree.map(lambda a: a[i],
+                                      (params["layers"], cache["layers"]))
+                    x, nl = body(x, sl)
+                    new_ls.append(nl)
+                new_layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                          *new_ls)
+            else:
+                x, new_layers = jax.lax.scan(
+                    body, x, (params["layers"], cache["layers"]))
+            new_cache = dict(cache)
+            new_cache["layers"] = new_layers
+            new_cache["idx"] = idx + 1
+
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+        table = params["embed"]["table"] if cfg.tie_embeddings else None
+        logits = (unembed(table, x) if table is not None
+                  else x @ params["head"])
+        return logits[:, 0], new_cache
+
+
+# ============================================================== loss
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (B,S,V), labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,12 @@
+"""Native JAX optimizers (pytree-based, optax-free)."""
+from repro.optim.optimizers import (
+    OptState,
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)
+
+__all__ = ["OptState", "Optimizer", "adamw", "apply_updates",
+           "clip_by_global_norm", "sgd"]

@@ -1,0 +1,92 @@
+"""SGD (+momentum) and AdamW as pure pytree transformations.
+
+API mirrors optax: ``opt = sgd(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params += updates``.
+The paper trains satellites with plain mini-batch SGD (lr 0.01); AdamW is
+provided for the LM-scale federated pre-training examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any = None       # first moment / momentum
+    nu: Any = None       # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def sgd(learning_rate: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            upd = jax.tree.map(lambda m: -learning_rate * m, mu)
+            return upd, OptState(state.step + 1, mu=mu)
+        upd = jax.tree.map(lambda g: -learning_rate * g, grads)
+        return upd, OptState(state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            nu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state.nu, grads)
+
+        def upd_leaf(m, v, p):
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-learning_rate * step_).astype(p.dtype)
+
+        upd = jax.tree.map(upd_leaf, mu, nu, params)
+        return upd, OptState(step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    """Returns (clipped grads, pre-clip global norm)."""
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,44 @@
+"""Orbital mechanics, visibility geometry, and link budgets for FL-Satcom.
+
+This subpackage is the physical substrate of FedHAP: a Walker-delta LEO
+constellation (positions over time), ground/HAP stations (rotating with the
+Earth), elevation-angle visibility, and RF/FSO link budgets that convert
+model payload sizes into communication delays (paper Eq. 5-13, Table I).
+"""
+from repro.orbits.constellation import (
+    EARTH_RADIUS_M,
+    MU_EARTH,
+    Satellite,
+    WalkerConstellation,
+    orbital_period_s,
+    orbital_speed_ms,
+)
+from repro.orbits.visibility import (
+    Station,
+    elevation_angle_deg,
+    is_visible,
+    visibility_mask,
+    visibility_windows,
+)
+from repro.orbits.links import (
+    FSO_DEFAULTS,
+    RF_DEFAULTS,
+    FsoLinkParams,
+    RfLinkParams,
+    fso_channel_gain,
+    fso_snr,
+    link_delay_s,
+    model_transfer_delay_s,
+    rf_snr,
+    shannon_rate_bps,
+)
+
+__all__ = [
+    "EARTH_RADIUS_M", "MU_EARTH", "Satellite", "WalkerConstellation",
+    "orbital_period_s", "orbital_speed_ms",
+    "Station", "elevation_angle_deg", "is_visible", "visibility_mask",
+    "visibility_windows",
+    "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
+    "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",
+    "rf_snr", "shannon_rate_bps",
+]

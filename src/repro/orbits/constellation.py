@@ -1,0 +1,163 @@
+"""Walker-delta constellation kinematics (paper §II, Fig. 1).
+
+We model circular orbits. Satellite positions are computed in an
+Earth-centered inertial (ECI) frame; ground/HAP stations rotate with the
+Earth (see `visibility.Station`). All units SI unless suffixed.
+
+The paper's setup (§IV-A): L=5 orbits x K=8 satellites, h=2000 km,
+inclination 80 deg, Walker-delta phasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+# Physical constants.
+EARTH_RADIUS_M = 6_371_000.0          # R_E
+MU_EARTH = 3.986004418e14             # G*M (m^3/s^2)
+EARTH_ROTATION_RAD_S = 7.2921159e-5   # sidereal rotation rate
+SPEED_OF_LIGHT = 299_792_458.0
+
+
+def orbital_period_s(altitude_m: float) -> float:
+    """T = 2*pi/sqrt(GM) * (R_E + h)^{3/2}   (paper §II)."""
+    a = EARTH_RADIUS_M + altitude_m
+    return 2.0 * math.pi * a ** 1.5 / math.sqrt(MU_EARTH)
+
+
+def orbital_speed_ms(altitude_m: float) -> float:
+    """v = 2*pi*(R_E + h) / T   (paper §II)."""
+    a = EARTH_RADIUS_M + altitude_m
+    return 2.0 * math.pi * a / orbital_period_s(altitude_m)
+
+
+@dataclasses.dataclass(frozen=True)
+class Satellite:
+    """A single LEO satellite on a circular orbit.
+
+    Identified by (orbit index, slot index) and a globally unique `sat_id`
+    — the paper's dedup (Eq. 15) keys on satellite IDs.
+    """
+    sat_id: int
+    orbit: int
+    slot: int
+    altitude_m: float
+    inclination_rad: float
+    raan_rad: float        # right ascension of ascending node (orbit plane)
+    phase_rad: float       # initial along-track anomaly
+
+    @property
+    def period_s(self) -> float:
+        return orbital_period_s(self.altitude_m)
+
+    def position_eci(self, t_s: float | np.ndarray) -> np.ndarray:
+        """ECI position at time(s) `t_s`; shape (..., 3)."""
+        t = np.asarray(t_s, dtype=np.float64)
+        a = EARTH_RADIUS_M + self.altitude_m
+        n = 2.0 * math.pi / self.period_s           # mean motion
+        u = self.phase_rad + n * t                   # argument of latitude
+        # Position in the orbital plane.
+        x_o = a * np.cos(u)
+        y_o = a * np.sin(u)
+        # Rotate by inclination about x, then RAAN about z.
+        ci, si = math.cos(self.inclination_rad), math.sin(self.inclination_rad)
+        co, so = math.cos(self.raan_rad), math.sin(self.raan_rad)
+        x = co * x_o - so * ci * y_o
+        y = so * x_o + co * ci * y_o
+        z = si * y_o
+        return np.stack([x, y, z], axis=-1)
+
+
+class WalkerConstellation:
+    """Walker-delta constellation: L equally spaced planes, K_l sats/plane.
+
+    Walker notation i:T/P/F with phasing factor F: the along-track phase
+    offset between adjacent planes is F * 360/T degrees.
+    """
+
+    def __init__(
+        self,
+        num_orbits: int = 5,
+        sats_per_orbit: int = 8,
+        altitude_m: float = 2_000_000.0,
+        inclination_deg: float = 80.0,
+        phasing_factor: int = 1,
+    ) -> None:
+        if num_orbits < 1 or sats_per_orbit < 1:
+            raise ValueError("need at least one orbit and one satellite")
+        self.num_orbits = num_orbits
+        self.sats_per_orbit = sats_per_orbit
+        self.altitude_m = altitude_m
+        self.inclination_rad = math.radians(inclination_deg)
+        total = num_orbits * sats_per_orbit
+        self.satellites: list[Satellite] = []
+        for l in range(num_orbits):
+            raan = 2.0 * math.pi * l / num_orbits
+            for k in range(sats_per_orbit):
+                phase = (
+                    2.0 * math.pi * k / sats_per_orbit
+                    + 2.0 * math.pi * phasing_factor * l / total
+                )
+                self.satellites.append(
+                    Satellite(
+                        sat_id=l * sats_per_orbit + k,
+                        orbit=l,
+                        slot=k,
+                        altitude_m=altitude_m,
+                        inclination_rad=self.inclination_rad,
+                        raan_rad=raan,
+                        phase_rad=phase,
+                    )
+                )
+
+    def __len__(self) -> int:
+        return len(self.satellites)
+
+    @property
+    def period_s(self) -> float:
+        return orbital_period_s(self.altitude_m)
+
+    def orbit_members(self, orbit: int) -> list[Satellite]:
+        return [s for s in self.satellites if s.orbit == orbit]
+
+    def ring_neighbor(self, sat: Satellite, direction: int = +1) -> Satellite:
+        """Next-hop satellite on the same orbit's PTP ring (paper §III-A).
+
+        `direction` +1 = the pre-designated dissemination direction,
+        -1 = reverse.
+        """
+        k = (sat.slot + direction) % self.sats_per_orbit
+        return self.orbit_members(sat.orbit)[k]
+
+    def positions_eci(self, t_s: float | np.ndarray) -> np.ndarray:
+        """Positions of every satellite; shape (n_sats, ..., 3)."""
+        return np.stack([s.position_eci(t_s) for s in self.satellites])
+
+    def isl_distance_m(self, a: Satellite, b: Satellite, t_s: float) -> float:
+        """Euclidean intra-plane ISL distance at time t."""
+        pa = a.position_eci(t_s)
+        pb = b.position_eci(t_s)
+        return float(np.linalg.norm(pa - pb))
+
+
+def station_position_eci(
+    lat_deg: float, lon_deg: float, altitude_m: float, t_s: float | np.ndarray
+) -> np.ndarray:
+    """ECI position of an Earth-fixed station (GS or HAP) at time(s) t.
+
+    The station rotates with the Earth at the sidereal rate; at t=0 the
+    Greenwich meridian is aligned with the ECI x-axis.
+    """
+    t = np.asarray(t_s, dtype=np.float64)
+    r = EARTH_RADIUS_M + altitude_m
+    lat = math.radians(lat_deg)
+    lon = np.radians(lon_deg) + EARTH_ROTATION_RAD_S * t
+    x = r * math.cos(lat) * np.cos(lon)
+    y = r * math.cos(lat) * np.sin(lon)
+    z = r * math.sin(lat) * np.ones_like(np.asarray(lon))
+    return np.stack([np.broadcast_to(x, np.shape(lon)),
+                     np.broadcast_to(y, np.shape(lon)),
+                     np.broadcast_to(z, np.shape(lon))], axis=-1)

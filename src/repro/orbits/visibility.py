@@ -1,0 +1,142 @@
+"""Visibility geometry between satellites and GS/HAP stations.
+
+Paper §II-B: satellite k and station g can communicate iff the elevation
+angle of k above g's local horizon exceeds alpha_min, i.e.
+    angle(r_g, r_k - r_g) <= pi/2 - alpha_min.
+
+A HAP at 20 km sees "beyond 180 degrees" (paper §III): at altitude h_s the
+local horizon is depressed by acos(R_E / (R_E + h_s)), so a HAP with the
+same alpha_min sees strictly more sky than a GS — we model this with the
+horizon-depression term, which is the physically correct statement of the
+paper's claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.orbits.constellation import (
+    EARTH_RADIUS_M,
+    Satellite,
+    WalkerConstellation,
+    station_position_eci,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Station:
+    """A parameter server: GS (altitude ~0) or HAP (stratosphere ~20 km)."""
+    name: str
+    lat_deg: float
+    lon_deg: float
+    altitude_m: float = 0.0
+    min_elevation_deg: float = 10.0
+
+    def position_eci(self, t_s: float | np.ndarray) -> np.ndarray:
+        return station_position_eci(
+            self.lat_deg, self.lon_deg, self.altitude_m, t_s
+        )
+
+    @property
+    def horizon_depression_deg(self) -> float:
+        """How far below the astronomical horizon this station can see."""
+        r = EARTH_RADIUS_M + self.altitude_m
+        return math.degrees(math.acos(min(1.0, EARTH_RADIUS_M / r)))
+
+    @property
+    def is_hap(self) -> bool:
+        return self.altitude_m > 1_000.0
+
+
+# The paper's two deployment sites (§IV-A).
+ROLLA = (37.9514, -91.7713)
+DALLAS = (32.7767, -96.7970)
+
+
+def elevation_angle_deg(
+    station_pos: np.ndarray, sat_pos: np.ndarray
+) -> np.ndarray:
+    """Elevation of the satellite above the station's local horizon plane.
+
+    elevation = 90 deg - angle(r_g, r_k - r_g).
+    """
+    rel = sat_pos - station_pos
+    num = np.sum(station_pos * rel, axis=-1)
+    den = np.linalg.norm(station_pos, axis=-1) * np.linalg.norm(rel, axis=-1)
+    cosang = np.clip(num / np.maximum(den, 1e-12), -1.0, 1.0)
+    return 90.0 - np.degrees(np.arccos(cosang))
+
+
+def is_visible(
+    station: Station, sat: Satellite, t_s: float | np.ndarray
+) -> np.ndarray:
+    """Feasibility condition of paper §II-B (vectorized over time).
+
+    The effective minimum elevation is alpha_min minus the horizon
+    depression earned by the station's altitude (0 for a GS).
+    """
+    sp = station.position_eci(t_s)
+    kp = sat.position_eci(t_s)
+    elev = elevation_angle_deg(sp, kp)
+    eff_min = station.min_elevation_deg - station.horizon_depression_deg
+    return elev >= eff_min
+
+
+def visibility_mask(
+    stations: Sequence[Station],
+    constellation: WalkerConstellation,
+    t_s: float | np.ndarray,
+) -> np.ndarray:
+    """Boolean mask [n_stations, n_sats, ...time] of who sees whom."""
+    t = np.asarray(t_s, dtype=np.float64)
+    out = np.zeros((len(stations), len(constellation)) + t.shape, dtype=bool)
+    for i, st in enumerate(stations):
+        for j, sat in enumerate(constellation.satellites):
+            out[i, j] = is_visible(st, sat, t)
+    return out
+
+
+def visibility_windows(
+    station: Station,
+    sat: Satellite,
+    t_start_s: float,
+    t_end_s: float,
+    step_s: float = 10.0,
+) -> list[tuple[float, float]]:
+    """Contiguous [rise, set] intervals within [t_start, t_end].
+
+    Sampled at `step_s` resolution (the paper simulates at comparable
+    granularity; windows at 2000 km last many minutes, so 10 s is ample).
+    """
+    ts = np.arange(t_start_s, t_end_s + step_s, step_s)
+    vis = np.asarray(is_visible(station, sat, ts))
+    windows: list[tuple[float, float]] = []
+    start = None
+    for i, v in enumerate(vis):
+        if v and start is None:
+            start = ts[i]
+        elif not v and start is not None:
+            windows.append((float(start), float(ts[i - 1])))
+            start = None
+    if start is not None:
+        windows.append((float(start), float(ts[-1])))
+    return windows
+
+
+def sat_sat_visible(
+    a_pos: np.ndarray, b_pos: np.ndarray, grazing_altitude_m: float = 80_000.0
+) -> np.ndarray:
+    """LoS between two space objects: the chord must clear the atmosphere.
+
+    Visibility is obstructed if the minimum distance from the Earth's center
+    to the segment [a, b] drops below R_E + grazing altitude (paper Eq. 6's
+    l_{a,b} condition).
+    """
+    d = b_pos - a_pos
+    dd = np.sum(d * d, axis=-1)
+    t = np.clip(-np.sum(a_pos * d, axis=-1) / np.maximum(dd, 1e-12), 0.0, 1.0)
+    closest = a_pos + t[..., None] * d
+    return np.linalg.norm(closest, axis=-1) >= EARTH_RADIUS_M + grazing_altitude_m

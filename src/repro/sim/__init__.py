@@ -1,0 +1,5 @@
+"""Event-driven FL-Satcom simulator (the paper's evaluation harness)."""
+from repro.sim.trainer import LocalTrainer
+from repro.sim.timeline import SatcomSimulator, SimConfig, SimResult
+
+__all__ = ["LocalTrainer", "SatcomSimulator", "SimConfig", "SimResult"]

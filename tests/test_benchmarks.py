@@ -1,0 +1,71 @@
+"""Benchmark-layer tests: config surfaces + artifact rendering."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+
+from benchmarks import bench_fig3, render_experiments
+from benchmarks.bench_roofline import load, render_markdown
+from repro.core.strategies import STRATEGIES, TABLE2_SETUPS
+
+
+class TestSetups:
+    def test_table2_covers_paper_rows(self):
+        assert set(TABLE2_SETUPS) == {
+            "FedISL", "FedISL (ideal)", "FedSat (ideal)", "FedSpace",
+            "FedHAP-GS", "FedHAP-oneHAP", "FedHAP-twoHAP"}
+        # ideal setups use the paper's ideal PS placements
+        assert TABLE2_SETUPS["FedSat (ideal)"].stations == "gs_np"
+        assert TABLE2_SETUPS["FedISL (ideal)"].stations == "meo"
+        assert TABLE2_SETUPS["FedHAP-twoHAP"].stations == "two_hap"
+
+    @pytest.mark.parametrize("panel", ["b", "c", "d"])
+    def test_fig3_panels_well_formed(self, panel):
+        curves = bench_fig3._curves(panel, quick=True)
+        assert len(curves) == 4
+        for cfg in curves.values():
+            assert cfg.strategy == "fedhap"
+        if panel == "b":
+            assert all(c.iid for c in curves.values())
+        if panel == "c":
+            assert not any(c.iid for c in curves.values())
+        if panel == "d":
+            assert sum(c.stations == "two_hap"
+                       for c in curves.values()) == 2
+
+    def test_strategies_registry(self):
+        assert set(STRATEGIES) == {"fedhap", "fedisl", "fedisl_ideal",
+                                   "fedsat", "fedspace"}
+
+
+class TestRendering:
+    def test_splice_idempotent(self):
+        s = render_experiments.splice("# X\n", "m", "CONTENT")
+        s2 = render_experiments.splice(s, "m", "CONTENT2")
+        assert "CONTENT2" in s2 and "CONTENT\n" not in s2
+        assert s2.count("<!-- m:begin -->") == 1
+
+    def test_roofline_artifacts_render(self):
+        rows = load("single")
+        if not rows:
+            pytest.skip("no roofline artifacts")
+        assert len(rows) >= 40  # all baselines present
+        md = render_markdown(rows)
+        assert md.count("\n") >= 40
+        for r in rows:
+            assert r["dominant"] in ("compute", "memory", "collective")
+            assert r["terms_s"]["memory_s"] >= 0
+
+    def test_dryrun_artifacts_are_complete_records(self):
+        d = pathlib.Path(__file__).parent.parent / "runs/dryrun"
+        if not d.exists():
+            pytest.skip("no dryrun artifacts")
+        files = list(d.glob("*.json"))
+        assert len(files) >= 80
+        a = json.loads(files[0].read_text())
+        for key in ("arch", "shape", "mesh", "collectives",
+                    "memory_analysis", "cost_analysis", "compile_s"):
+            assert key in a

@@ -1,0 +1,56 @@
+"""Checkpoint round-trip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def _tree(seed=0):
+    k = jax.random.split(jax.random.key(seed), 3)
+    return {
+        "layers": {"w": jax.random.normal(k[0], (4, 8)),
+                   "b": jnp.zeros(8)},
+        "embed": jax.random.normal(k[1], (16, 4)).astype(jnp.bfloat16),
+        "step_scalar": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, t, step=7, metadata={"arch": "test"})
+    like = jax.tree.map(jnp.zeros_like, t)
+    loaded, manifest = load_checkpoint(tmp_path, like)
+    assert manifest["step"] == 7
+    assert manifest["metadata"]["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_pointer(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, t, step=1)
+    t2 = jax.tree.map(lambda x: x + 1, t)
+    save_checkpoint(tmp_path, t2, step=2)
+    like = jax.tree.map(jnp.zeros_like, t)
+    loaded, manifest = load_checkpoint(tmp_path, like)  # picks latest
+    assert manifest["step"] == 2
+    np.testing.assert_allclose(
+        np.asarray(loaded["layers"]["b"]), 1.0)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, _tree(), step=1)
+    bad = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="mismatch"):
+        load_checkpoint(tmp_path, bad, step=1)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, t, step=1)
+    t["layers"]["w"] = jnp.zeros((5, 8))
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(tmp_path, t, step=1)

@@ -1,0 +1,151 @@
+"""Tests for the data pipeline: digit rendering, partitioning, loaders."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import (
+    BatchIterator,
+    FederatedData,
+    TokenTaskConfig,
+    make_digits_dataset,
+    make_token_dataset,
+    partition_iid,
+    partition_noniid_by_orbit,
+    render_digit,
+)
+
+
+class TestDigits:
+    def test_shapes_and_range(self):
+        x, y = make_digits_dataset(512, seed=1)
+        assert x.shape == (512, 28, 28)
+        assert x.dtype == np.float32
+        assert 0.0 <= x.min() and x.max() <= 1.0
+        assert set(np.unique(y)) <= set(range(10))
+
+    def test_deterministic(self):
+        x1, y1 = make_digits_dataset(128, seed=7)
+        x2, y2 = make_digits_dataset(128, seed=7)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+        x3, _ = make_digits_dataset(128, seed=8)
+        assert not np.array_equal(x1, x3)
+
+    def test_classes_are_distinguishable(self):
+        """Mean images of different classes should be far apart relative to
+        within-class scatter — a sanity proxy for learnability."""
+        x, y = make_digits_dataset(2000, seed=0)
+        means = np.stack([x[y == d].mean(axis=0) for d in range(10)])
+        inter = np.linalg.norm(
+            means[:, None] - means[None, :], axis=(-1, -2)
+        )
+        np.fill_diagonal(inter, np.inf)
+        assert inter.min() > 1.0  # no two class prototypes collapse
+
+    def test_render_digit_nonempty(self):
+        rng = np.random.default_rng(0)
+        for d in range(10):
+            img = render_digit(d, rng)
+            assert img.sum() > 5.0
+
+
+class TestPartition:
+    def test_iid_covers_all_indices(self):
+        y = np.arange(1000) % 10
+        parts = partition_iid(y, 40, seed=0)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 1000
+        assert len(np.unique(allidx)) == 1000
+
+    def test_iid_each_client_has_all_classes(self):
+        _, y = make_digits_dataset(4000, seed=0)
+        parts = partition_iid(y, 10, seed=0)
+        for p in parts:
+            assert len(set(y[p])) == 10
+
+    def test_noniid_orbit_split_matches_paper(self):
+        """3 orbits get classes 0-5, 2 orbits get classes 6-9 (L=5, K=8)."""
+        _, y = make_digits_dataset(8000, seed=0)
+        parts = partition_noniid_by_orbit(y, num_orbits=5, sats_per_orbit=8)
+        assert len(parts) == 40
+        for sid, p in enumerate(parts):
+            orbit = sid // 8
+            classes = set(y[p])
+            if orbit < 3:
+                assert classes <= {0, 1, 2, 3, 4, 5}
+            else:
+                assert classes <= {6, 7, 8, 9}
+
+    @given(n_orb=st.integers(2, 8), k=st.integers(1, 8))
+    @settings(max_examples=10, deadline=None)
+    def test_noniid_partition_is_disjoint(self, n_orb, k):
+        y = np.arange(2000) % 10
+        parts = partition_noniid_by_orbit(y, n_orb, k, seed=3)
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(allidx)
+
+
+class TestLoader:
+    def test_batch_iterator_shapes_and_epochs(self):
+        x = np.arange(100, dtype=np.float32)
+        it = BatchIterator([x], batch_size=32, seed=0)
+        seen = []
+        for _ in range(3):
+            (b,) = next(it)
+            assert b.shape == (32,)
+            seen.append(b)
+        assert it.epoch_batches() == 3
+        # First epoch batches are disjoint.
+        cat = np.concatenate(seen)
+        assert len(np.unique(cat)) == 96
+
+    def test_reshuffles_between_epochs(self):
+        x = np.arange(64, dtype=np.float32)
+        it = BatchIterator([x], batch_size=64, seed=0)
+        (e0,) = next(it)
+        (e1,) = next(it)
+        assert not np.array_equal(e0, e1)
+        assert set(e0) == set(e1)
+
+    def test_federated_data_sizes(self):
+        x, y = make_digits_dataset(800, seed=0)
+        parts = partition_iid(y, 8, seed=0)
+        fd = FederatedData(x, y, parts)
+        assert fd.num_clients == 8
+        assert fd.client_sizes().sum() == 800
+        bx, by = next(fd.client_iterator(3, 16))
+        assert bx.shape == (16, 28, 28)
+        assert by.shape == (16,)
+
+
+class TestTokens:
+    def test_deterministic_and_in_vocab(self):
+        cfg = TokenTaskConfig(vocab_size=512, seed=2)
+        a = make_token_dataset(2048, cfg, client=0)
+        b = make_token_dataset(2048, cfg, client=0)
+        np.testing.assert_array_equal(a, b)
+        assert a.min() >= 0 and a.max() < 512
+
+    def test_clients_differ_under_skew(self):
+        cfg = TokenTaskConfig(vocab_size=512, client_skew=0.5, seed=2)
+        a = make_token_dataset(2048, cfg, client=0)
+        b = make_token_dataset(2048, cfg, client=1)
+        assert not np.array_equal(a, b)
+
+    def test_not_uniform_noise(self):
+        """The chain must have learnable structure: bigram statistics carry
+        information about the next token (mutual information well above the
+        ~K/N sampling-noise floor for an i.i.d. uniform stream)."""
+        cfg = TokenTaskConfig(vocab_size=64, num_states=16, seed=0)
+        t = make_token_dataset(16384, cfg, client=0)
+        v = 64
+        joint = np.zeros((v, v))
+        np.add.at(joint, (t[:-1], t[1:]), 1.0)
+        joint /= joint.sum()
+        px = joint.sum(1, keepdims=True)
+        py = joint.sum(0, keepdims=True)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            mi = np.nansum(joint * np.log(joint / (px * py)))
+        noise_floor = (v - 1) ** 2 / (2 * 16384)  # chi2 approx of MI bias
+        assert mi > 2 * noise_floor

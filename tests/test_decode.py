@@ -1,0 +1,152 @@
+"""Decode-path consistency: token-by-token decode must reproduce the
+full-sequence forward logits (per architecture family), including the
+sliding-window and MLA compressed-cache paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Transformer
+
+# (arch, tolerance): fp32 op-reordering noise amplifies through deep
+# residual stacks with exp nonlinearities (mamba dt / rwkv decay), so the
+# hybrid gets a looser bound. All blocks are individually exact (see
+# test_kernels / isolated-block tests).
+CASES = [
+    ("qwen3-0.6b", 1e-4),
+    ("mistral-nemo-12b", 1e-4),
+    ("deepseek-coder-33b", 1e-4),
+    ("minicpm3-4b", 1e-4),          # absorbed-MLA decode vs expanded prefill
+    ("granite-moe-1b-a400m", 1e-3),
+    ("qwen3-moe-30b-a3b", 1e-3),
+    ("rwkv6-3b", 1e-3),
+    ("jamba-v0.1-52b", 1e-2),
+]
+
+
+def _decode_all(model, params, cache, tokens, use_window=False):
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t,
+                                                     use_window=use_window))
+    outs = []
+    for t in range(tokens.shape[1]):
+        lg, cache = step(params, cache, tokens[:, t])
+        outs.append(lg)
+    return jnp.stack(outs, 1), cache
+
+
+@pytest.mark.parametrize("arch,tol", CASES)
+def test_decode_matches_forward(arch, tol):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:  # avoid capacity-drop divergence in the prefill reference
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    ref, _ = model.forward(params, tokens)
+    cache = model.init_cache(b, s)
+    got, cache = _decode_all(model, params, cache, tokens)
+    assert int(cache["idx"]) == s
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=tol)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    """SWA rolling cache == full-sequence forward with the same window."""
+    cfg = get_config("mistral-nemo-12b").reduced()
+    assert cfg.sliding_window is not None
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 64  # > window (32) so the ring buffer actually wraps
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+
+    # Reference: direct forward with window masking.
+    from repro.models.transformer import _apply_block  # intra-package
+    ref, _ = _forward_with_window(model, params, tokens)
+    cache = model.init_cache(b, s, use_window=True)
+    # leaves are stacked (num_periods, batch, window, hkv, dh)
+    assert cache["layers"]["b0"]["k"].shape[2] == cfg.sliding_window
+    got, _ = _decode_all(model, params, cache, tokens, use_window=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
+
+
+def _forward_with_window(model, params, tokens):
+    """Forward pass with SWA masks (test-only reference)."""
+    cfg = model.cfg
+    import repro.models.transformer as T
+    from repro.models.layers import apply_embed, apply_norm, unembed
+
+    x = apply_embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, pp):
+        h, aux = carry
+        for j, kind in enumerate(model.pattern):
+            h, a = T._apply_block(cfg, kind, cfg.layer_is_moe(j),
+                                  pp[f"b{j}"], h, positions,
+                                  window=cfg.sliding_window)
+            aux = aux + a
+        return (h, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    table = params["embed"]["table"] if cfg.tie_embeddings else None
+    return (unembed(table, x) if table is not None
+            else x @ params["head"]), aux
+
+
+def test_whisper_encdec_decode():
+    """Whisper: prime encoder cross-caches, then decode; logits finite and
+    cross-attention actually used (zeroing frames changes logits)."""
+    cfg = get_config("whisper-small").reduced()
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    frames = jax.random.normal(jax.random.key(2),
+                               (b, cfg.encoder_seq, cfg.d_model))
+    ref, _ = model.forward(params, tokens, {"frames": frames})
+    cache = model.init_cache(b, s)
+    cache = model.prime_encdec(params, cache, frames)
+    got, _ = _decode_all(model, params, cache, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+    # Cross-attention matters:
+    cache0 = model.init_cache(b, s)
+    cache0 = model.prime_encdec(params, cache0, jnp.zeros_like(frames))
+    got0, _ = _decode_all(model, params, cache0, tokens)
+    assert float(jnp.max(jnp.abs(got0 - got))) > 1e-3
+
+
+def test_mla_cache_is_compressed():
+    """The MLA cache must store latents, not expanded K/V."""
+    cfg = get_config("minicpm3-4b").reduced()
+    model = Transformer(cfg)
+    cache = model.init_cache(2, 64)
+    c = cache["layers"]["b0"]
+    assert set(c) == {"c_kv", "k_rope", "pos"}
+    assert c["c_kv"].shape[-1] == cfg.mla.kv_lora_rank
+    # Far smaller than an expanded cache would be:
+    expanded = cfg.num_heads * (cfg.mla.qk_nope_head_dim
+                                + cfg.mla.qk_rope_head_dim
+                                + cfg.mla.v_head_dim)
+    assert c["c_kv"].shape[-1] + c["k_rope"].shape[-1] < expanded / 3
+    # At full config the compression is ~27x:
+    full = get_config("minicpm3-4b")
+    full_lat = full.mla.kv_lora_rank + full.mla.qk_rope_head_dim
+    full_exp = full.num_heads * (full.mla.qk_nope_head_dim
+                                 + full.mla.qk_rope_head_dim
+                                 + full.mla.v_head_dim)
+    assert full_exp / full_lat > 20
+
+
+def test_rwkv_state_is_constant_size():
+    cfg = get_config("rwkv6-3b").reduced()
+    model = Transformer(cfg)
+    c16 = model.init_cache(2, 16)
+    c512 = model.init_cache(2, 512)
+    assert (jax.tree.map(lambda a: a.shape, c16["layers"])
+            == jax.tree.map(lambda a: a.shape, c512["layers"]))

@@ -1,0 +1,124 @@
+"""Federated training integration (single-device logical round) +
+launch-spec sanitization unit tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.aggregation import segment_upload_weights
+from repro.core.dissemination import ConstellationMeshMap
+from repro.core.fed_step import FedTrainConfig, stack_params
+from repro.core.mesh_round import FedRoundConfig
+from repro.launch.train import _ensure_coverage, _mu_weights, \
+    _single_device_round, make_batches
+from repro.models.transformer import Transformer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = Transformer(cfg)
+    cmap = ConstellationMeshMap(n_orbits=2, sats_per_orbit=2, n_pods=1)
+    fed_cfg = FedTrainConfig(
+        round_cfg=FedRoundConfig(cmap=cmap, ship_global_echo=False),
+        learning_rate=0.05)
+    return cfg, model, cmap, fed_cfg
+
+
+class TestLogicalRound:
+    def test_fed_training_reduces_loss(self, setup):
+        cfg, model, cmap, fed_cfg = setup
+        step = jax.jit(_single_device_round(model, fed_cfg))
+        params_S = stack_params(model.init(jax.random.key(0)), 4)
+        sizes = jnp.ones(4)
+        rng = np.random.default_rng(0)
+        losses = []
+        for rnd in range(6):
+            batch = make_batches(cfg, 4, 2, 32, rnd, cfg.vocab_size)
+            vis = jnp.asarray(_ensure_coverage(rng, cmap, 0.5))
+            params_S, m = step(params_S, batch, sizes, vis)
+            losses.append(float(m["local_loss"]))
+        assert losses[-1] < losses[0], losses
+
+    def test_round_synchronizes_replicas(self, setup):
+        cfg, model, cmap, fed_cfg = setup
+        step = jax.jit(_single_device_round(model, fed_cfg))
+        params_S = stack_params(model.init(jax.random.key(0)), 4)
+        batch = make_batches(cfg, 4, 2, 32, 0, cfg.vocab_size)
+        vis = jnp.asarray([True, False, True, True])
+        new_S, _ = step(params_S, batch, jnp.ones(4), vis)
+        # after a round every satellite holds the same global model
+        leaf = jax.tree.leaves(new_S)[0]
+        np.testing.assert_allclose(np.asarray(leaf[0]),
+                                   np.asarray(leaf[3]), atol=1e-6)
+
+    @pytest.mark.parametrize("mode", ["paper", "exact"])
+    def test_mu_weights_match_segment_math(self, mode):
+        """The jnp closed-form weights == the numpy reference weights."""
+        cmap = ConstellationMeshMap(n_orbits=2, sats_per_orbit=4, n_pods=1)
+        rng = np.random.default_rng(5)
+        for _ in range(5):
+            vis = rng.random(8) < 0.5
+            for l in range(2):
+                if not vis[l * 4:(l + 1) * 4].any():
+                    vis[l * 4 + rng.integers(4)] = True
+            sizes = rng.uniform(1, 9, 8)
+            mu = np.asarray(_mu_weights(jnp.asarray(vis),
+                                        jnp.asarray(sizes, jnp.float32),
+                                        cmap, mode, "paper"))
+            # reference: lam * seg_mass / m_orbit / L per orbit
+            want = np.zeros(8)
+            for l in range(2):
+                sl = slice(l * 4, (l + 1) * 4)
+                lam, seg_end, seg_mass = segment_upload_weights(
+                    vis[sl], sizes[sl], mode)
+                want[sl] = lam * seg_mass / sizes[sl].sum() / 2
+            np.testing.assert_allclose(mu, want, rtol=1e-5)
+
+    def test_mu_weights_sum_to_one(self):
+        cmap = ConstellationMeshMap(n_orbits=2, sats_per_orbit=4, n_pods=1)
+        vis = jnp.asarray([True, False, False, True,
+                           False, True, False, False])
+        mu = _mu_weights(vis, jnp.ones(8), cmap, "paper", "paper")
+        np.testing.assert_allclose(float(mu.sum()), 1.0, rtol=1e-6)
+
+
+class TestSanitizeSpecs:
+    def test_moves_nondivisible_model_axis(self):
+        from repro.launch.specs import sanitize_specs
+
+        class FakeMesh:
+            shape = {"model": 16}
+
+        example = {"embed": jax.ShapeDtypeStruct((51865, 768), jnp.float32),
+                   "ok": jax.ShapeDtypeStruct((1024, 2048), jnp.float32)}
+        specs = {"embed": P("model", None), "ok": P(None, "model")}
+        out = sanitize_specs(example, specs, FakeMesh())
+        assert out["embed"] == P(None, "model")  # moved to 768
+        assert out["ok"] == P(None, "model")     # untouched
+
+    def test_drops_when_no_dim_divisible(self):
+        from repro.launch.specs import sanitize_specs
+
+        class FakeMesh:
+            shape = {"model": 16}
+
+        example = {"w": jax.ShapeDtypeStruct((7, 9), jnp.float32)}
+        specs = {"w": P("model", None)}
+        out = sanitize_specs(example, specs, FakeMesh())
+        assert out["w"] == P(None, None)
+
+    def test_respects_prefix_entries(self):
+        from repro.launch.specs import sanitize_specs
+
+        class FakeMesh:
+            shape = {"model": 16}
+
+        example = {"w": jax.ShapeDtypeStruct((16, 51865, 768), jnp.float32)}
+        specs = {"w": P(("pod", "data"), "model", None)}
+        out = sanitize_specs(example, specs, FakeMesh())
+        assert out["w"] == P(("pod", "data"), None, "model")

@@ -1,0 +1,34 @@
+"""Multi-device FedHAP mesh-round tests.
+
+These need >1 XLA device; device count is fixed at first jax init, so the
+checks run in a subprocess with XLA_FLAGS=--xla_force_host_platform_
+device_count=8 (the main pytest process keeps its single CPU device, per
+the dry-run isolation policy).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HELPERS = pathlib.Path(__file__).parent / "helpers"
+SRC = pathlib.Path(__file__).parent.parent / "src"
+
+
+def _run(script: str, timeout: int = 900) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}:{env.get('PYTHONPATH', '')}"
+    env.pop("XLA_FLAGS", None)  # script sets its own
+    return subprocess.run(
+        [sys.executable, str(HELPERS / script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+def test_mesh_round_equivalences():
+    """Faithful ring == numpy ref == fused round; exact+global == FedAvg;
+    Eq.-15 gating; multi-pod HAP chain == psum. See check_mesh_round.py."""
+    res = _run("check_mesh_round.py")
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL MESH ROUND CHECKS PASSED" in res.stdout

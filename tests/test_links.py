@@ -1,0 +1,110 @@
+"""Tests for the RF/FSO link budgets and the delay model (Eq. 5-13, Eq. 7)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.orbits.constellation import SPEED_OF_LIGHT
+from repro.orbits.links import (
+    FSO_DEFAULTS,
+    RF_DEFAULTS,
+    RfLinkParams,
+    free_space_path_loss,
+    fso_channel_gain,
+    fso_geometric_loss,
+    fso_snr,
+    fso_turbulence_loss,
+    hufnagel_valley_cn2,
+    link_delay_s,
+    link_rate_bps,
+    model_transfer_delay_s,
+    rf_snr,
+    shannon_rate_bps,
+)
+
+
+class TestRf:
+    def test_fspl_hand_calc(self):
+        # d=1000 km, f=2.4 GHz: FSPL = (4 pi d f / c)^2 -> ~160 dB.
+        loss = free_space_path_loss(1_000_000.0, 2.4e9)
+        assert 10 * math.log10(loss) == pytest.approx(160.05, abs=0.1)
+
+    def test_snr_decreases_with_distance(self):
+        d = np.array([500e3, 1000e3, 2000e3])
+        s = rf_snr(d)
+        assert s[0] > s[1] > s[2] > 0
+
+    def test_snr_inverse_square(self):
+        assert rf_snr(1000e3) / rf_snr(2000e3) == pytest.approx(4.0, rel=1e-9)
+
+    def test_shannon_rate_monotone(self):
+        r = shannon_rate_bps(np.array([1.0, 10.0, 100.0]), 1e6)
+        assert r[0] < r[1] < r[2]
+        assert shannon_rate_bps(1.0, 1e6) == pytest.approx(1e6)  # log2(2)=1
+
+
+class TestFso:
+    def test_channel_gain_inverse_square(self):
+        g1 = fso_channel_gain(100e3)
+        g2 = fso_channel_gain(200e3)
+        assert g1 / g2 == pytest.approx(4.0, rel=1e-9)
+
+    def test_geometric_loss_caps_at_unity_when_applied(self):
+        # At short distance the formula exceeds 1; fso_snr clips it.
+        assert fso_geometric_loss(1.0) > 1.0
+        assert fso_geometric_loss(1000e3) < 1.0
+
+    def test_hufnagel_valley_profile(self):
+        # Turbulence strength decays with altitude: ground >> stratosphere.
+        assert hufnagel_valley_cn2(0.0) > hufnagel_valley_cn2(20e3) > 0
+
+    def test_turbulence_loss_grows_with_distance(self):
+        l1 = fso_turbulence_loss(100e3, 20e3)
+        l2 = fso_turbulence_loss(1000e3, 20e3)
+        assert l2 > l1 >= 0
+
+    def test_fso_snr_positive_and_decreasing(self):
+        s1 = fso_snr(200e3)
+        s2 = fso_snr(800e3)
+        assert s1 > s2 > 0
+
+
+class TestDelay:
+    def test_eq7_decomposition(self):
+        """t_d = z|D|/R + d/c + t_a + t_b with Table I's R=16 Mb/s."""
+        payload = 8e6  # 1 MB
+        d = 1500e3
+        td = link_delay_s(payload, d, kind="rf", processing_delay_s=0.05)
+        expected = payload / 16e6 + d / SPEED_OF_LIGHT + 0.1
+        assert td == pytest.approx(expected, rel=1e-12)
+
+    def test_fixed_rate_matches_table1(self):
+        assert link_rate_bps(1000e3, "rf") == 16e6
+        assert link_rate_bps(1000e3, "fso") == 16e6  # calibrated (paper §IV)
+
+    def test_shannon_mode_when_unpinned(self):
+        p = RfLinkParams(fixed_rate_bps=None)
+        r = link_rate_bps(1000e3, "rf", rf=p)
+        assert r == pytest.approx(
+            float(shannon_rate_bps(rf_snr(1000e3, p), p.bandwidth_hz))
+        )
+
+    @given(
+        n=st.integers(min_value=1, max_value=10_000_000),
+        d=st.floats(min_value=10e3, max_value=4000e3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_transfer_delay_monotone_in_size_and_distance(self, n, d):
+        t1 = model_transfer_delay_s(n, d)
+        t2 = model_transfer_delay_s(n + 1000, d)
+        t3 = model_transfer_delay_s(n, d + 50e3)
+        assert t2 >= t1
+        assert t3 >= t1
+        assert t1 > 0
+
+    def test_cnn_model_transfer_is_seconds_scale(self):
+        # A ~1.6M-param fp32 CNN at 16 Mb/s: ~3.3 s transmission.
+        t = model_transfer_delay_s(1_600_000, 2000e3)
+        assert 2.0 < t < 10.0

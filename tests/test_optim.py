@@ -1,0 +1,93 @@
+"""Optimizer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
+
+
+def quadratic(p):
+    return jnp.sum((p["x"] - 3.0) ** 2) + jnp.sum((p["y"] + 1.0) ** 2)
+
+
+def _params():
+    return {"x": jnp.zeros(3), "y": jnp.ones(2)}
+
+
+class TestSgd:
+    def test_converges_on_quadratic(self):
+        opt = sgd(0.1)
+        p = _params()
+        st = opt.init(p)
+        for _ in range(100):
+            g = jax.grad(quadratic)(p)
+            upd, st = opt.update(g, st, p)
+            p = apply_updates(p, upd)
+        np.testing.assert_allclose(p["x"], 3.0, atol=1e-3)
+        np.testing.assert_allclose(p["y"], -1.0, atol=1e-3)
+
+    def test_momentum_accelerates(self):
+        p0 = _params()
+        losses = {}
+        for mom in (0.0, 0.9):
+            opt = sgd(0.02, momentum=mom)
+            p, st = p0, opt.init(p0)
+            for _ in range(30):
+                g = jax.grad(quadratic)(p)
+                upd, st = opt.update(g, st, p)
+                p = apply_updates(p, upd)
+            losses[mom] = float(quadratic(p))
+        assert losses[0.9] < losses[0.0]
+
+    def test_step_counts(self):
+        opt = sgd(0.1)
+        st = opt.init(_params())
+        _, st = opt.update(jax.grad(quadratic)(_params()), st, None)
+        assert int(st.step) == 1
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        opt = adamw(0.3)
+        p = _params()
+        st = opt.init(p)
+        for _ in range(200):
+            g = jax.grad(quadratic)(p)
+            upd, st = opt.update(g, st, p)
+            p = apply_updates(p, upd)
+        np.testing.assert_allclose(p["x"], 3.0, atol=1e-2)
+
+    def test_weight_decay_shrinks(self):
+        opt = adamw(0.01, weight_decay=0.5)
+        p = {"x": jnp.full(4, 10.0)}
+        st = opt.init(p)
+        zero_g = {"x": jnp.zeros(4)}
+        for _ in range(10):
+            upd, st = opt.update(zero_g, st, p)
+            p = apply_updates(p, upd)
+        assert float(jnp.abs(p["x"]).max()) < 10.0
+
+    def test_bf16_params_update(self):
+        opt = adamw(1e-2)
+        p = {"x": jnp.ones(4, jnp.bfloat16)}
+        st = opt.init(p)
+        g = {"x": jnp.ones(4, jnp.bfloat16)}
+        upd, st = opt.update(g, st, p)
+        p2 = apply_updates(p, upd)
+        assert p2["x"].dtype == jnp.bfloat16
+        assert float(p2["x"][0]) < 1.0
+
+
+class TestClip:
+    def test_noop_below_threshold(self):
+        g = {"a": jnp.ones(4)}
+        c, gn = clip_by_global_norm(g, 100.0)
+        np.testing.assert_allclose(c["a"], 1.0)
+        np.testing.assert_allclose(gn, 2.0)
+
+    def test_scales_above_threshold(self):
+        g = {"a": jnp.full(4, 10.0)}
+        c, gn = clip_by_global_norm(g, 1.0)
+        total = jnp.sqrt(jnp.sum(c["a"] ** 2))
+        np.testing.assert_allclose(total, 1.0, rtol=1e-5)

@@ -1,0 +1,163 @@
+"""Unit + property tests for the orbital mechanics substrate."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.orbits import (
+    EARTH_RADIUS_M,
+    Satellite,
+    Station,
+    WalkerConstellation,
+    elevation_angle_deg,
+    is_visible,
+    orbital_period_s,
+    orbital_speed_ms,
+    visibility_mask,
+    visibility_windows,
+)
+from repro.orbits.constellation import station_position_eci
+from repro.orbits.visibility import DALLAS, ROLLA, sat_sat_visible
+
+
+class TestKinematics:
+    def test_period_matches_kepler(self):
+        # ISS-like 400 km orbit: ~92.5 min. 2000 km: ~127 min.
+        assert orbital_period_s(400e3) == pytest.approx(92.5 * 60, rel=0.02)
+        assert orbital_period_s(2000e3) == pytest.approx(127 * 60, rel=0.02)
+
+    def test_speed_consistent_with_period(self):
+        h = 2000e3
+        v = orbital_speed_ms(h)
+        t = orbital_period_s(h)
+        assert v * t == pytest.approx(2 * math.pi * (EARTH_RADIUS_M + h), rel=1e-9)
+
+    @given(h=st.floats(min_value=300e3, max_value=2000e3))
+    @settings(max_examples=25, deadline=None)
+    def test_radius_invariant_along_orbit(self, h):
+        sat = Satellite(0, 0, 0, h, math.radians(80), 0.3, 0.7)
+        ts = np.linspace(0.0, orbital_period_s(h), 50)
+        r = np.linalg.norm(sat.position_eci(ts), axis=-1)
+        np.testing.assert_allclose(r, EARTH_RADIUS_M + h, rtol=1e-9)
+
+    def test_orbit_is_periodic(self):
+        sat = Satellite(0, 0, 0, 2000e3, math.radians(80), 1.0, 0.5)
+        p0 = sat.position_eci(0.0)
+        p1 = sat.position_eci(sat.period_s)
+        np.testing.assert_allclose(p0, p1, atol=1.0)  # within a meter
+
+
+class TestWalker:
+    def test_paper_constellation_shape(self):
+        c = WalkerConstellation(5, 8, 2000e3, 80.0)
+        assert len(c) == 40
+        assert len(c.orbit_members(0)) == 8
+        ids = [s.sat_id for s in c.satellites]
+        assert ids == sorted(set(ids))  # unique, ordered
+
+    def test_equal_spacing_within_orbit(self):
+        c = WalkerConstellation(5, 8, 2000e3, 80.0)
+        pos = c.positions_eci(0.0)
+        m = c.orbit_members(2)
+        # Adjacent slots in one plane are equidistant (equally spaced).
+        d = [
+            np.linalg.norm(pos[m[i].sat_id] - pos[m[(i + 1) % 8].sat_id])
+            for i in range(8)
+        ]
+        np.testing.assert_allclose(d, d[0], rtol=1e-6)
+
+    def test_ring_neighbor_wraps(self):
+        c = WalkerConstellation(3, 4, 2000e3, 80.0)
+        s = c.orbit_members(1)[3]
+        assert c.ring_neighbor(s, +1).slot == 0
+        assert c.ring_neighbor(s, -1).slot == 2
+        assert c.ring_neighbor(s, +1).orbit == 1
+
+    def test_isl_distance_positive_and_stable(self):
+        c = WalkerConstellation(5, 8, 2000e3, 80.0)
+        a, b = c.orbit_members(0)[0], c.orbit_members(0)[1]
+        d0 = c.isl_distance_m(a, b, 0.0)
+        d1 = c.isl_distance_m(a, b, 1234.0)
+        assert d0 > 1e5
+        # Intra-plane distances are constant on circular orbits.
+        assert d0 == pytest.approx(d1, rel=1e-6)
+
+
+class TestVisibility:
+    def test_station_rotates_with_earth(self):
+        p0 = station_position_eci(0.0, 0.0, 0.0, 0.0)
+        quarter = 2 * math.pi / 7.2921159e-5 / 4
+        p1 = station_position_eci(0.0, 0.0, 0.0, quarter)
+        # 90 degrees later the x-station is on the y axis.
+        assert abs(p1[0]) < 1e3 * EARTH_RADIUS_M * 1e-3
+        assert p1[1] == pytest.approx(EARTH_RADIUS_M, rel=1e-6)
+
+    def test_elevation_overhead_is_90(self):
+        sp = np.array([EARTH_RADIUS_M, 0.0, 0.0])
+        kp = np.array([EARTH_RADIUS_M + 2000e3, 0.0, 0.0])
+        assert elevation_angle_deg(sp, kp) == pytest.approx(90.0, abs=1e-6)
+
+    def test_elevation_opposite_side_is_negative(self):
+        sp = np.array([EARTH_RADIUS_M, 0.0, 0.0])
+        kp = np.array([-(EARTH_RADIUS_M + 2000e3), 0.0, 0.0])
+        assert elevation_angle_deg(sp, kp) < 0
+
+    def test_hap_sees_at_least_as_much_as_gs(self):
+        """Paper §I claim: a HAP sees more satellites than a GS at the same
+        site. With identical alpha_min the horizon depression can only add
+        visibility."""
+        c = WalkerConstellation(5, 8, 2000e3, 80.0)
+        gs = Station("gs", *ROLLA, altitude_m=0.0, min_elevation_deg=10.0)
+        hap = Station("hap", *ROLLA, altitude_m=20e3, min_elevation_deg=10.0)
+        ts = np.linspace(0, 6 * 3600, 73)
+        m = visibility_mask([gs, hap], c, ts)
+        gs_count = m[0].sum()
+        hap_count = m[1].sum()
+        assert hap_count >= gs_count
+        assert hap_count > 0
+
+    @given(t=st.floats(min_value=0, max_value=86400))
+    @settings(max_examples=20, deadline=None)
+    def test_visibility_requires_los_geometry(self, t):
+        """If visible, satellite must be above the depressed horizon plane."""
+        sat = Satellite(0, 0, 0, 2000e3, math.radians(80), 0.0, 0.0)
+        st_ = Station("hap", *ROLLA, altitude_m=20e3, min_elevation_deg=10.0)
+        if bool(is_visible(st_, sat, t)):
+            elev = elevation_angle_deg(
+                st_.position_eci(t), sat.position_eci(t)
+            )
+            assert elev >= 10.0 - st_.horizon_depression_deg - 1e-9
+
+    def test_windows_are_disjoint_ordered(self):
+        sat = Satellite(0, 0, 0, 2000e3, math.radians(80), 0.0, 0.0)
+        st_ = Station("hap", *ROLLA, altitude_m=20e3, min_elevation_deg=10.0)
+        w = visibility_windows(sat=sat, station=st_, t_start_s=0.0,
+                               t_end_s=86400.0, step_s=30.0)
+        assert len(w) >= 1  # 80-deg inclination over Rolla: several passes/day
+        for (a0, a1), (b0, b1) in zip(w, w[1:]):
+            assert a0 <= a1 < b0 <= b1
+
+    def test_sat_sat_los_blocked_by_earth(self):
+        a = np.array([EARTH_RADIUS_M + 2000e3, 0.0, 0.0])
+        b = np.array([-(EARTH_RADIUS_M + 2000e3), 0.0, 0.0])
+        assert not bool(sat_sat_visible(a, b))
+        # 90 deg apart at 2000 km the chord midpoint dips to r/sqrt(2)
+        # = 5919 km < R_E: still blocked.
+        c_ = np.array([0.0, EARTH_RADIUS_M + 2000e3, 0.0])
+        assert not bool(sat_sat_visible(a, c_))
+        # 60 deg apart the midpoint sits at r*cos(30deg) = 7249 km: clear.
+        r = EARTH_RADIUS_M + 2000e3
+        d_ = np.array([r * math.cos(math.radians(60)),
+                       r * math.sin(math.radians(60)), 0.0])
+        assert bool(sat_sat_visible(a, d_))
+
+    def test_two_hap_sites_differ(self):
+        c = WalkerConstellation(5, 8, 2000e3, 80.0)
+        h1 = Station("rolla", *ROLLA, altitude_m=20e3)
+        h2 = Station("dallas", *DALLAS, altitude_m=20e3)
+        ts = np.linspace(0, 3 * 3600, 37)
+        m = visibility_mask([h1, h2], c, ts)
+        # The two sites are ~600 km apart — masks overlap but not identical.
+        assert (m[0] != m[1]).any()
