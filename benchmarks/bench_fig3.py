@@ -73,12 +73,31 @@ def run(panel: str, quick: bool = True) -> dict:
     return out
 
 
+def sim_wallclock(quick: bool = True, rounds: int = 25) -> dict:
+    """Simulator rounds/sec for this bench's constellation tier (quick:
+    3x4, full: the paper's 5x8) — engine vs seed-style scans."""
+    from benchmarks.sim_wallclock import report
+    cfg = next(iter(_curves("d", quick).values()))
+    cfg = dataclasses.replace(cfg, strategy="fedhap",
+                              num_samples=4000, eval_samples=500)
+    return report("fig3", cfg, rounds=rounds)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--panel", default="c", choices=["b", "c", "d"])
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sim-wallclock", action="store_true",
+                    help="report simulator rounds/sec vs the seed-style "
+                         "implementation instead of running the panel")
+    ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--out")
     args = ap.parse_args()
+    if args.sim_wallclock:
+        res = sim_wallclock(quick=not args.full, rounds=args.rounds)
+        if args.out:
+            json.dump(res, open(args.out, "w"), indent=1)
+        raise SystemExit(0)
     res = run(args.panel, quick=not args.full)
     if args.out:
         json.dump(res, open(args.out, "w"), indent=1)

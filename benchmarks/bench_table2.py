@@ -60,11 +60,31 @@ def main(quick: bool = True) -> None:
               f"{r['sim_hours']}")
 
 
+def sim_wallclock(rounds: int = 25) -> dict:
+    """Simulator rounds/sec on the paper's 5x8 constellation (no SGD):
+    vectorized engine vs a faithful port of the seed's per-round scans."""
+    from benchmarks.sim_wallclock import report
+    cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                    model_kind="mlp", num_samples=4000, eval_samples=500,
+                    horizon_h=72.0, time_step_s=30.0)
+    return report("table2", cfg, rounds=rounds)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sim-wallclock", action="store_true",
+                    help="report simulator rounds/sec vs the seed-style "
+                         "implementation instead of running Table II")
+    ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--out")
     args = ap.parse_args()
+    if args.sim_wallclock:
+        res = sim_wallclock(rounds=args.rounds)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=1)
+        raise SystemExit(0)
     rows = run(quick=not args.full)
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,146 @@
+"""Simulator-throughput benchmark: vectorized engine vs seed-style scans.
+
+Measures pure simulator rounds/sec (scheduling + closed-form weights +
+einsum aggregation — local SGD excluded, it is identical in both and
+would swamp the comparison). The ``legacy`` path is a faithful port of
+the pre-registry monolith's per-round machinery: O(T) Python ``while``
+scans over the visibility grid per orbit, per-satellite ``unstack`` and
+Python tree-op folds, ``full_aggregate`` over per-orbit partial lists.
+
+Used by ``bench_table2.py --sim-wallclock`` and
+``bench_fig3.py --sim-wallclock``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.aggregation import full_aggregate, segment_upload_weights
+from repro.core.treeops import tree_add, tree_scale
+from repro.sim import SatcomSimulator, SimConfig
+from repro.sim.strategies import FedHap
+
+
+def _legacy_first_contacts(eng, t):
+    """Seed behavior: step the clock until each orbit sees a station."""
+    cfg = eng.cfg
+    orbit_t = np.full(cfg.num_orbits, np.nan)
+    for l in range(cfg.num_orbits):
+        sl = eng.orbit_slice(l)
+        tl = t
+        while tl <= eng.horizon_s:
+            if eng.vis_at(tl)[:, sl].any():
+                orbit_t[l] = tl
+                break
+            tl += cfg.time_step_s
+    return orbit_t
+
+
+def _legacy_round(eng, stacked, t):
+    """Seed behavior: per-orbit segment folds via unstack + tree ops."""
+    cfg = eng.cfg
+    k = cfg.sats_per_orbit
+    orbit_t = _legacy_first_contacts(eng, t)
+    if np.isnan(orbit_t).any():
+        return None
+    per_orbit = {}
+    isl = eng.isl_delay()
+    train_t = eng.train_time()
+    round_end = t
+    for l in range(cfg.num_orbits):
+        sl = eng.orbit_slice(l)
+        tl = float(orbit_t[l])
+        vis_l = eng.vis_at(tl)
+        any_vis = vis_l.any(axis=0)
+        owner = np.full(eng.n_sats, -1)
+        for si in range(len(eng.stations)):
+            newly = vis_l[si] & (owner < 0)
+            owner[newly] = si
+        lam, seg_end, seg_mass = segment_upload_weights(
+            any_vis[sl], eng.sizes[sl], cfg.partial_mode)
+        parts = []
+        for end in np.unique(seg_end[seg_end >= 0]):
+            members = np.nonzero(seg_end == end)[0]
+            model = None
+            for m in members:
+                leaf = eng.trainer.unstack(stacked, l * k + m)
+                contrib = tree_scale(leaf, lam[m])
+                model = (contrib if model is None
+                         else tree_add(model, contrib))
+            up_st = owner[l * k + end]
+            up_st = up_st if up_st >= 0 else 0
+            lat = (train_t + len(members) * isl
+                   + eng.shl_delay(up_st, l * k + end, tl))
+            round_end = max(round_end, tl + lat)
+            parts.append((float(seg_mass[members[0]]), model))
+        per_orbit[l] = parts
+    params = full_aggregate(per_orbit, cfg.orbit_weighting)
+    return params, round_end
+
+
+def run_wallclock(cfg: SimConfig, rounds: int = 25,
+                  compare_legacy: bool = True) -> dict:
+    """Drive `rounds` FedHAP rounds through both simulator paths.
+
+    Returns {"engine_rps", "legacy_rps", "speedup", "rounds"}.
+    """
+    eng = SatcomSimulator(cfg)
+    strat = FedHap()
+    params = eng.trainer.init(cfg.seed)
+    stacked = eng.trainer.stack([params] * eng.n_sats)
+    jax.block_until_ready(stacked)
+    ring = 2 * (len(eng.stations) - 1) * eng.ihl_delay()
+
+    def drive_engine():
+        t, n = 0.0, 0
+        while n < rounds:
+            plan = strat.plan_round(eng, t)
+            if plan is None:
+                break
+            jax.block_until_ready(eng.combine(stacked, plan.mu))
+            t = plan.round_end + ring
+            n += 1
+        return n
+
+    def drive_legacy():
+        t, n = 0.0, 0
+        while n < rounds:
+            out = _legacy_round(eng, stacked, t)
+            if out is None:
+                break
+            jax.block_until_ready(out[0])
+            t = out[1] + ring
+            n += 1
+        return n
+
+    # Warm up BOTH paths (jit/dispatch caches) before timing either.
+    drive_engine()
+    if compare_legacy:
+        drive_legacy()
+    t0 = time.perf_counter()
+    n_e = drive_engine()
+    dt_e = time.perf_counter() - t0
+    out = {"rounds": n_e, "engine_rps": n_e / dt_e,
+           "legacy_rps": None, "speedup": None}
+    if compare_legacy:
+        t0 = time.perf_counter()
+        n_l = drive_legacy()
+        dt_l = time.perf_counter() - t0
+        assert n_l == n_e, (n_l, n_e)
+        out["legacy_rps"] = n_l / dt_l
+        out["speedup"] = out["engine_rps"] / out["legacy_rps"]
+    return out
+
+
+def report(tag: str, cfg: SimConfig, rounds: int = 25) -> dict:
+    res = run_wallclock(cfg, rounds=rounds)
+    line = (f"sim-wallclock[{tag}] {cfg.num_orbits}x{cfg.sats_per_orbit} "
+            f"{cfg.stations}: engine {res['engine_rps']:.1f} rounds/s")
+    if res["speedup"] is not None:
+        line += (f" | seed-style {res['legacy_rps']:.1f} rounds/s"
+                 f" | speedup {res['speedup']:.1f}x")
+    print(line, flush=True)
+    return res

@@ -1,0 +1,39 @@
+"""Version compatibility shims for the JAX API surface.
+
+The codebase is written against the modern names (``jax.shard_map``,
+``jax.set_mesh``); older jaxlibs (e.g. 0.4.x) ship the same machinery
+under ``jax.experimental.shard_map.shard_map`` (with ``check_rep``
+instead of ``check_vma``) and use the ambient-mesh context manager on
+``Mesh`` itself. Import from here instead of feature-testing in every
+module.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "set_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(body, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(body, *, mesh, in_specs, out_specs, check_vma=False):
+        return _exp_shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh: Any):
+        # Mesh is its own ambient-mesh context manager on old jax.
+        with mesh:
+            yield mesh

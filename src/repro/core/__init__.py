@@ -1,15 +1,19 @@
 """FedHAP core: the paper's contribution as composable JAX modules.
 
+- `weights`: THE closed-form Eq. 14-16 weights engine (batched
+  numpy/jnp) — single source of truth for every aggregation path.
 - `aggregation`: Eq. 14 partial aggregation (paper recursion + exact
   running-mean correction), Eq. 15 dedup set cover, Eq. 16 full
-  aggregation, closed-form chain weights.
+  aggregation; per-orbit weight API wrapping `weights`.
+- `treeops`: shared pytree arithmetic (scale/add/sub/einsum-combine).
 - `mesh_round`: the hierarchical FedHAP round as shard_map collectives on
   the production mesh (intra-orbit ppermute rings, masked HAP psum,
   inter-HAP pod-axis ring), plus the FedAvg baseline round and the
-  beyond-paper "fused" round.
+  beyond-paper "fused" round (closed-form weights from `weights`).
 - `dissemination`: ring schedules / source-sink ordering shared by the
   mesh round and the timeline simulator.
-- `strategies`: timeline-level FedHAP / FedISL / FedSat / FedSpace.
+- `strategies`: timeline-level strategy registry
+  (FedHAP / FedISL / FedSat / FedSpace) over `repro.sim.engine`.
 """
 from repro.core.aggregation import (
     chain_weights,
@@ -18,8 +22,15 @@ from repro.core.aggregation import (
     partial_aggregate,
     segment_upload_weights,
 )
+from repro.core.weights import (
+    chain_stats,
+    mu_from_chain,
+    mu_weights,
+    segment_ends,
+)
 
 __all__ = [
     "chain_weights", "dedup_set_cover", "full_aggregate",
     "partial_aggregate", "segment_upload_weights",
+    "chain_stats", "mu_from_chain", "mu_weights", "segment_ends",
 ]

@@ -1,5 +1,12 @@
 """FedHAP aggregation math (paper Eq. 14-16).
 
+The closed-form weight math lives in :mod:`repro.core.weights` (the
+single source of truth shared with the mesh round and the simulator);
+this module keeps the literal Eq.-14 recursion (``partial_aggregate``),
+the Eq.-15 dedup set cover, the Eq.-16 tree aggregation, and the
+per-orbit ``segment_upload_weights`` API as a thin wrapper over the
+batched engine.
+
 Two partial-aggregation modes:
 
 - ``"paper"`` — Eq. 14 verbatim: w <- (1-γ_k')·w + γ_k'·w_k' with
@@ -19,8 +26,15 @@ from __future__ import annotations
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.core.treeops import tree_add, tree_scale
+from repro.core.weights import chain_stats, chain_weights, segment_ends
+
+__all__ = [
+    "partial_aggregate", "chain_weights", "segment_upload_weights",
+    "dedup_set_cover", "full_aggregate",
+]
 
 
 def partial_aggregate(
@@ -48,35 +62,6 @@ def partial_aggregate(
     return upd, m_acc + m_new
 
 
-def chain_weights(
-    sizes: Sequence[float], m_orbit_total: float, mode: str = "paper"
-) -> np.ndarray:
-    """Closed-form effective weight of each chain member.
-
-    ``sizes[0]`` is the *origin* (visible satellite whose local model seeds
-    the chain); subsequent entries are the invisible satellites folded in
-    order. The result λ satisfies:
-        chain_result == Σ_i λ_i · w_i,   Σ_i λ_i == 1.
-
-    paper mode:  λ_i = γ_i · Π_{u>i} (1-γ_u), γ_0 ≡ 1, γ_i = m_i/m_orbit.
-    exact mode:  λ_i = m_i / Σ_j m_j (the weighted mean).
-    """
-    sizes = np.asarray(sizes, dtype=np.float64)
-    n = len(sizes)
-    if mode == "exact":
-        return sizes / sizes.sum()
-    if mode != "paper":
-        raise ValueError(mode)
-    gammas = sizes / m_orbit_total
-    gammas[0] = 1.0
-    lam = np.empty(n)
-    suffix = 1.0
-    for i in range(n - 1, -1, -1):
-        lam[i] = gammas[i] * suffix
-        suffix *= (1.0 - gammas[i]) if i > 0 else 1.0
-    return lam
-
-
 def segment_upload_weights(
     visible: np.ndarray,
     sizes: np.ndarray,
@@ -94,30 +79,15 @@ def segment_upload_weights(
     invisible satellites, delivering to the *next* visible satellite. If no
     satellite is visible the orbit contributes nothing (all seg_end = -1):
     Eq. 15's missing-ID gating.
+
+    Thin single-orbit wrapper over the batched engine in
+    :mod:`repro.core.weights`.
     """
     visible = np.asarray(visible, dtype=bool)
     sizes = np.asarray(sizes, dtype=np.float64)
-    k = len(visible)
-    lam = np.zeros(k)
-    seg_end = np.full(k, -1, dtype=np.int64)
-    seg_mass = np.zeros(k)
-    if not visible.any():
-        return lam, seg_end, seg_mass
-    m_orbit = sizes.sum()
-    vis_idx = np.nonzero(visible)[0]
-    for o in vis_idx:
-        members = [o]
-        j = (o + 1) % k
-        while not visible[j]:
-            members.append(j)
-            j = (j + 1) % k
-        w = chain_weights(sizes[members], m_orbit, mode)
-        mass = sizes[members].sum()
-        for mi, wi in zip(members, w):
-            lam[mi] = wi
-            seg_end[mi] = j
-            seg_mass[mi] = mass
-    return lam, seg_end, seg_mass
+    lam, seg_mass = chain_stats(visible[None], sizes[None], mode, xp=np)
+    seg_end = segment_ends(visible[None])
+    return lam[0], seg_end[0], seg_mass[0]
 
 
 def dedup_set_cover(
@@ -162,16 +132,15 @@ def full_aggregate(
             m_l = sum(m for m, _ in per_orbit[l])
             for mass, model in per_orbit[l]:
                 w = mass / m_l / len(orbits)
-                acc = (jax.tree.map(lambda x: w * x, model) if acc is None
-                       else jax.tree.map(lambda a, x: a + w * x, acc, model))
+                term = tree_scale(model, w)
+                acc = term if acc is None else tree_add(acc, term)
         return acc
     if orbit_weighting == "global":
         total = sum(m for l in orbits for m, _ in per_orbit[l])
         acc = None
         for l in orbits:
             for mass, model in per_orbit[l]:
-                w = mass / total
-                acc = (jax.tree.map(lambda x: w * x, model) if acc is None
-                       else jax.tree.map(lambda a, x: a + w * x, acc, model))
+                term = tree_scale(model, mass / total)
+                acc = term if acc is None else tree_add(acc, term)
         return acc
     raise ValueError(orbit_weighting)

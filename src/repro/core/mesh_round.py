@@ -34,13 +34,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.dissemination import (
     ConstellationMeshMap,
     hap_chain_down,
     hap_chain_up,
 )
-
-shard_map = jax.shard_map
+from repro.core.weights import chain_stats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,7 +316,8 @@ def _fused_body(w_shard, sizes_shard, visible_shard, cfg: FedRoundConfig,
     Per-satellite weight mu_x = (m_seg / m_l) * lam_x / L   (paper orbit
     weighting), where lam_x is the Eq.-14 chain weight of x inside its
     segment and m_seg the segment mass. All scalar bookkeeping runs on
-    (D,)-sized vectors from one tiny all_gather.
+    (D,)-sized vectors from one tiny all_gather; the chain math itself is
+    the shared closed-form engine (`repro.core.weights.chain_stats`).
     """
     w = _squeeze0(w_shard)
     m_self = sizes_shard[0].astype(jnp.float32)
@@ -332,53 +333,13 @@ def _fused_body(w_shard, sizes_shard, visible_shard, cfg: FedRoundConfig,
     orbit_vis = jax.lax.dynamic_slice(vis_all, (my_orbit * k,), (k,))
     m_orbit = orbit_sizes.sum()
 
-    # --- closed-form chain weight of *this* satellite.
-    # Walk forward from my slot: (1-gamma) products of the invisible
-    # satellites after me until the segment's terminal visible satellite.
-    def gamma_of(slot):
-        m = orbit_sizes[slot]
-        if cfg.partial_mode == "paper":
-            return m / m_orbit
-        return m  # exact mode handled via mass ratios below
-
-    # Static unroll over ring distance (k is small and static).
-    suffix = jnp.ones(())
-    seg_mass = m_self
-    terminated = jnp.zeros((), bool)
-    for step in range(1, k):
-        nxt = (my_slot + step) % k
-        nxt_vis = orbit_vis[nxt]
-        nxt_invisible_active = (~terminated) & (~nxt_vis)
-        if cfg.partial_mode == "paper":
-            g_nxt = orbit_sizes[nxt] / m_orbit
-            suffix = jnp.where(nxt_invisible_active,
-                               suffix * (1.0 - g_nxt), suffix)
-        seg_mass = jnp.where(nxt_invisible_active,
-                             seg_mass + orbit_sizes[nxt], seg_mass)
-        terminated = terminated | nxt_vis
-
-    # Walk backward to find my segment's origin and accumulated-prefix
-    # mass (exact mode) — the segment origin is the nearest visible
-    # satellite at or before me.
-    prefix_mass = jnp.zeros(())   # mass accumulated before me in my segment
-    back_done = vis_self
-    for step in range(1, k):
-        prv = (my_slot - step) % k
-        active = ~back_done
-        prefix_mass = jnp.where(active, prefix_mass + orbit_sizes[prv],
-                                prefix_mass)
-        back_done = back_done | orbit_vis[prv]
-    seg_mass_full = prefix_mass + seg_mass
-
-    if cfg.partial_mode == "paper":
-        my_gamma = jnp.where(vis_self, 1.0, m_self / m_orbit)
-        lam = my_gamma * suffix
-    else:
-        # exact: lam_x = m_x / m_segment.
-        lam = m_self / seg_mass_full
-
-    orbit_has_vis = orbit_vis.any()
-    lam = jnp.where(orbit_has_vis, lam, 0.0)
+    # Closed-form chain weight of every slot in my orbit (the static
+    # ring unroll lives in the shared engine); pick out my own.
+    lam_vec, seg_vec = chain_stats(orbit_vis, orbit_sizes,
+                                   cfg.partial_mode, xp=jnp)
+    lam = lam_vec[my_slot]
+    seg_mass_full = seg_vec[my_slot]
+    orbit_has_vis = orbit_vis.astype(bool).any()
 
     n_orbits_total = cfg.cmap.n_orbits * (cfg.cmap.n_pods if multi_pod else 1)
     axes = ("data", "pod") if multi_pod else ("data",)

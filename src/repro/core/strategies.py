@@ -1,8 +1,32 @@
-"""Timeline-level FL strategies (paper baselines).
+"""Timeline-level FL strategies (paper baselines) — stable import surface.
 
-The implementations live in `repro.sim.timeline` (they need the physical
-simulator); this module is the stable import surface and documents the
-mapping to the paper's Table II rows:
+Architecture
+------------
+
+The simulator is a **strategy registry on a shared vectorized engine**:
+
+- ``repro.core.weights`` is the *single source of truth* for the
+  Eq. 14-16 closed-form aggregation weights. The same batched
+  ``(visible, sizes) -> (lam, seg_mass, mu)`` math backs all three
+  consumers — the numpy aggregation API
+  (``repro.core.aggregation.segment_upload_weights``), the fused mesh
+  round (``repro.core.mesh_round._fused_body``, jnp under shard_map),
+  and the timeline simulator / launch driver (``mu_weights``). No
+  chain-weight math is duplicated anywhere else.
+- ``repro.sim.engine.RoundEngine`` owns the physical world, the round
+  loop, precomputed **next-contact tables** (O(1) contact queries over
+  the visibility grid instead of per-round Python scans), and
+  **einsum aggregation** over stacked per-satellite params (no
+  ``unstack``, no Python tree folds).
+- Each method below is a small class registered in
+  ``repro.sim.strategies`` supplying only its scheduling + weighting
+  rules; ``SimConfig.strategy`` resolves through
+  :func:`get_strategy`. New methods register with
+  :func:`register_strategy`; new *scenarios* (multi-HAP counts via
+  ``stations="haps:N"``, station grids via ``stations="grid:RxC"``,
+  buffer/staleness sink scheduling knobs) are pure ``SimConfig``.
+
+Mapping to the paper's Table II rows:
 
 | strategy        | paper row            | PS setup                  |
 |-----------------|----------------------|---------------------------|
@@ -13,9 +37,14 @@ mapping to the paper's Table II rows:
 | fedsat          | FedSat (ideal)       | GS at the North Pole      |
 | fedspace        | FedSpace             | GS, arbitrary location    |
 """
-from repro.sim.timeline import SatcomSimulator, SimConfig, SimResult
-
-STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace")
+from repro.sim.engine import RoundEngine, SatcomSimulator, SimConfig, SimResult
+from repro.sim.strategies import (
+    STRATEGIES,
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 
 # Station setups used by the paper's experiments.
 TABLE2_SETUPS: dict[str, SimConfig] = {
@@ -28,5 +57,8 @@ TABLE2_SETUPS: dict[str, SimConfig] = {
     "FedHAP-twoHAP": SimConfig(strategy="fedhap", stations="two_hap"),
 }
 
-__all__ = ["SatcomSimulator", "SimConfig", "SimResult", "STRATEGIES",
-           "TABLE2_SETUPS"]
+__all__ = [
+    "RoundEngine", "SatcomSimulator", "SimConfig", "SimResult",
+    "Strategy", "STRATEGIES", "TABLE2_SETUPS",
+    "available_strategies", "get_strategy", "register_strategy",
+]

@@ -1,0 +1,47 @@
+"""Shared pytree arithmetic for aggregation and the timeline simulator.
+
+Small helpers over ``jax.tree`` used by ``repro.core.aggregation`` and
+``repro.sim.engine`` (they operate on numpy or jax leaves alike). The
+mesh round keeps its own float32-casting variants — those carry
+collective-specific semantics and live with the shard_map code.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_scale(tree: Any, s: Any) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_weighted_sum(trees: Sequence[Any], weights: Sequence[float]) -> Any:
+    """Sequential Σ w_i · tree_i (reference fold; see tree_combine for the
+    vectorized path over an already-stacked tree)."""
+    acc = None
+    for t, w in zip(trees, weights):
+        term = tree_scale(t, float(w))
+        acc = term if acc is None else tree_add(acc, term)
+    return acc
+
+
+def tree_combine(stacked: Any, weights: Any) -> Any:
+    """Σ_s weights[s] · stacked[s] without unstacking: one einsum per
+    leaf over the leading (satellite) dim."""
+    w = jnp.asarray(weights, jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.einsum("s,s...->...", w, x), stacked)
+
+
+__all__ = ["tree_scale", "tree_add", "tree_sub", "tree_weighted_sum",
+           "tree_combine"]

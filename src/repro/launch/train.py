@@ -19,8 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
+from repro.compat import set_mesh
 from repro.configs import get_config, list_configs
 from repro.core.dissemination import ConstellationMeshMap
+from repro.core.weights import mu_weights
 from repro.core.fed_step import (
     FedTrainConfig,
     build_fed_train_step,
@@ -101,7 +103,7 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
 
     if mesh.shape["data"] == n_sats:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step_fn = jax.jit(build_fed_train_step(model, fed_cfg, mesh))
     else:
         step_fn = jax.jit(_single_device_round(model, fed_cfg))
@@ -109,7 +111,7 @@ def main() -> None:
     print(f"[train] {cfg.name}: {model.count_params()/1e6:.1f}M params, "
           f"{n_sats} satellites, {args.round_kind}")
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for rnd in range(args.rounds):
             batch = make_batches(cfg, n_sats, args.batch_per_sat, args.seq,
                                  rnd, cfg.vocab_size)
@@ -174,48 +176,11 @@ def _single_device_round(model: Transformer, fed_cfg: FedTrainConfig):
 
 
 def _mu_weights(visible, sizes, cmap, partial_mode, orbit_weighting):
-    """jnp port of segment_upload_weights x Eq. 16 for 1-device runs."""
-    k = cmap.sats_per_orbit
-    n_orbits = cmap.n_orbits * cmap.n_pods
-    mus = []
-    for l in range(n_orbits):
-        sl = slice(l * k, (l + 1) * k)
-        vis = visible[sl]
-        sz = sizes[sl].astype(jnp.float32)
-        m_orbit = sz.sum()
-        lam = jnp.zeros(k)
-        seg_mass = sz
-        suffix = jnp.ones(k)
-        terminated = jnp.zeros(k, bool)
-        for stp in range(1, k):
-            nxt = (jnp.arange(k) + stp) % k
-            nxt_vis = vis[nxt]
-            active = (~terminated) & (~nxt_vis)
-            if partial_mode == "paper":
-                suffix = jnp.where(active,
-                                   suffix * (1 - sz[nxt] / m_orbit), suffix)
-            seg_mass = jnp.where(active, seg_mass + sz[nxt], seg_mass)
-            terminated = terminated | nxt_vis
-        prefix_mass = jnp.zeros(k)
-        back_done = vis
-        for stp in range(1, k):
-            prv = (jnp.arange(k) - stp) % k
-            active = ~back_done
-            prefix_mass = jnp.where(active, prefix_mass + sz[prv],
-                                    prefix_mass)
-            back_done = back_done | vis[prv]
-        seg_full = prefix_mass + seg_mass
-        if partial_mode == "paper":
-            gamma = jnp.where(vis, 1.0, sz / m_orbit)
-            lam = gamma * suffix
-        else:
-            lam = sz / seg_full
-        lam = jnp.where(vis.any(), lam, 0.0)
-        if orbit_weighting == "paper":
-            mus.append(seg_full / m_orbit * lam / n_orbits)
-        else:
-            mus.append(seg_full / sizes.sum() * lam)
-    return jnp.concatenate(mus)
+    """Per-satellite global weights for 1-device runs — the shared
+    closed-form engine (`repro.core.weights`), jnp backend."""
+    return mu_weights(visible, sizes.astype(jnp.float32),
+                      cmap.sats_per_orbit, partial_mode, orbit_weighting,
+                      xp=jnp)
 
 
 if __name__ == "__main__":

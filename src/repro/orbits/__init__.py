@@ -17,6 +17,7 @@ from repro.orbits.visibility import (
     Station,
     elevation_angle_deg,
     is_visible,
+    next_contact_table,
     visibility_mask,
     visibility_windows,
 )
@@ -36,8 +37,8 @@ from repro.orbits.links import (
 __all__ = [
     "EARTH_RADIUS_M", "MU_EARTH", "Satellite", "WalkerConstellation",
     "orbital_period_s", "orbital_speed_ms",
-    "Station", "elevation_angle_deg", "is_visible", "visibility_mask",
-    "visibility_windows",
+    "Station", "elevation_angle_deg", "is_visible", "next_contact_table",
+    "visibility_mask", "visibility_windows",
     "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
     "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",
     "rf_snr", "shannon_rate_bps",

@@ -110,20 +110,40 @@ def visibility_windows(
 
     Sampled at `step_s` resolution (the paper simulates at comparable
     granularity; windows at 2000 km last many minutes, so 10 s is ample).
+    Edge detection is vectorized (one `np.diff` over the sampled series
+    instead of a Python scan).
     """
     ts = np.arange(t_start_s, t_end_s + step_s, step_s)
     vis = np.asarray(is_visible(station, sat, ts))
-    windows: list[tuple[float, float]] = []
-    start = None
-    for i, v in enumerate(vis):
-        if v and start is None:
-            start = ts[i]
-        elif not v and start is not None:
-            windows.append((float(start), float(ts[i - 1])))
-            start = None
-    if start is not None:
-        windows.append((float(start), float(ts[-1])))
-    return windows
+    if not vis.any():
+        return []
+    edges = np.diff(vis.astype(np.int8))
+    rises = np.nonzero(edges == 1)[0] + 1
+    sets_ = np.nonzero(edges == -1)[0]
+    if vis[0]:
+        rises = np.concatenate([[0], rises])
+    if vis[-1]:
+        sets_ = np.concatenate([sets_, [len(vis) - 1]])
+    return [(float(ts[r]), float(ts[s])) for r, s in zip(rises, sets_)]
+
+
+def next_contact_table(vis: np.ndarray) -> np.ndarray:
+    """Next-contact lookup over a precomputed visibility grid.
+
+    ``vis``: ``(..., T)`` bool time series (any leading batch dims:
+    stations, orbits, satellites). Returns an int table ``nxt`` of the
+    same shape where ``nxt[..., i]`` is the smallest grid index ``j >= i``
+    with ``vis[..., j]`` True, or the sentinel ``T`` when no contact
+    remains.
+
+    One reversed ``minimum.accumulate`` per series replaces the O(T)
+    Python scan the simulator used to run per orbit per round: contact
+    queries become O(1) lookups.
+    """
+    vis = np.asarray(vis, dtype=bool)
+    T = vis.shape[-1]
+    idx = np.where(vis, np.arange(T), T)
+    return np.minimum.accumulate(idx[..., ::-1], axis=-1)[..., ::-1]
 
 
 def sat_sat_visible(

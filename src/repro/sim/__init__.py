@@ -1,5 +1,21 @@
 """Event-driven FL-Satcom simulator (the paper's evaluation harness)."""
+from repro.sim.engine import (
+    RoundEngine,
+    SatcomSimulator,
+    SimConfig,
+    SimResult,
+)
+from repro.sim.strategies import (
+    STRATEGIES,
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 from repro.sim.trainer import LocalTrainer
-from repro.sim.timeline import SatcomSimulator, SimConfig, SimResult
 
-__all__ = ["LocalTrainer", "SatcomSimulator", "SimConfig", "SimResult"]
+__all__ = [
+    "LocalTrainer", "RoundEngine", "SatcomSimulator", "SimConfig",
+    "SimResult", "STRATEGIES", "Strategy", "available_strategies",
+    "get_strategy", "register_strategy",
+]

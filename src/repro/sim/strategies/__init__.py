@@ -1,0 +1,27 @@
+"""Timeline strategy registry.
+
+Importing this package registers the built-in FL-Satcom methods
+(fedhap | fedisl | fedisl_ideal | fedsat | fedspace). Each strategy is a
+small class supplying only scheduling + weighting rules; the shared
+round loop, physics, and aggregation live in ``repro.sim.engine``.
+"""
+from repro.sim.strategies.base import (
+    RunState,
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
+# Built-in strategies self-register on import.
+from repro.sim.strategies.fedhap import FedHap, RoundPlan
+from repro.sim.strategies.fedisl import FedIsl
+from repro.sim.strategies.fedsat import FedSat
+from repro.sim.strategies.fedspace import FedSpace
+
+STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace")
+
+__all__ = [
+    "RunState", "Strategy", "available_strategies", "get_strategy",
+    "register_strategy", "STRATEGIES",
+    "FedHap", "RoundPlan", "FedIsl", "FedSat", "FedSpace",
+]

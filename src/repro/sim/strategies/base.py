@@ -1,0 +1,83 @@
+"""Strategy registry and base class for the timeline simulator.
+
+A *strategy* supplies only the scheduling + weighting rules of one
+FL-Satcom method; the shared round loop, the physical world (visibility
+grids, next-contact tables, link delays), local training, and einsum
+aggregation all live in :class:`repro.sim.engine.RoundEngine`.
+
+Registering a strategy:
+
+    @register_strategy("myfed")
+    class MyFed(Strategy):
+        def step(self, eng, s):  # one round / event tick
+            ...
+            return True          # False terminates the run
+
+The engine's ``run()`` resolves ``SimConfig.strategy`` through this
+registry, so new methods (and new scenarios of existing methods) are a
+registration + config away — no simulator edits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Type
+
+_REGISTRY: Dict[str, Type["Strategy"]] = {}
+
+
+def register_strategy(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Strategy under ``name``."""
+    def deco(cls: type) -> type:
+        if not issubclass(cls, Strategy):
+            raise TypeError(f"{cls!r} is not a Strategy")
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"strategy {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> Type["Strategy"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@dataclasses.dataclass
+class RunState:
+    """Mutable per-run state threaded through ``Strategy.step`` calls.
+
+    ``events`` is the strategy's round/event counter (checked against
+    ``SimConfig.max_rounds``); ``scratch`` holds strategy-private state
+    (per-orbit base models, staleness buffers, ...).
+    """
+    params: Any
+    t: float = 0.0
+    acc: float = 0.0
+    events: int = 0
+    history: list = dataclasses.field(default_factory=list)
+    scratch: dict = dataclasses.field(default_factory=dict)
+
+
+class Strategy:
+    """One FL-Satcom method's scheduling + weighting rules."""
+
+    name: str = "?"
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        """Advance one round (sync methods) or one event tick (async).
+
+        Must advance ``s.t`` and, when a global model is produced,
+        update ``s.params``/``s.events`` and record accuracy via
+        ``eng.eval_and_record``. Return False to terminate the run
+        (e.g. no remaining contact before the horizon).
+        """
+        raise NotImplementedError

@@ -1,0 +1,90 @@
+"""FedHAP (paper Alg. 1): intra-orbit Eq.-14 chains, HAP collection.
+
+Scheduling: the source HAP accumulates partials until every satellite is
+covered — each orbit reports at its own first visibility and the round
+completes when the LAST orbit reports (paper Alg. 1 line 18 reschedules
+until the cover is full). Weighting: closed-form Eq. 14-16 per-satellite
+weights from `repro.core.weights`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.weights import chain_stats, mu_from_chain, segment_ends
+from repro.sim.strategies.base import RunState, Strategy, register_strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Scheduling + weighting decision for one FedHAP round (no training
+    involved — also driven standalone by the --sim-wallclock benches)."""
+    orbit_t: np.ndarray       # (L,) per-orbit report times [s]
+    mu: np.ndarray            # (n_sats,) Eq. 14-16 global weights
+    round_end: float          # when the last partial lands on the HAP [s]
+
+
+@register_strategy("fedhap")
+class FedHap(Strategy):
+
+    def plan_round(self, eng: Any, t: float) -> RoundPlan | None:
+        """Vectorized schedule for the round starting at ``t``.
+
+        Returns None when some orbit has no remaining contact before the
+        horizon (the run ends). Per-orbit visibility rows are gathered at
+        each orbit's own report time; chain weights for ALL orbits come
+        from one batched closed-form evaluation.
+        """
+        cfg = eng.cfg
+        orbit_t = eng.first_orbit_contacts(t)
+        if np.isnan(orbit_t).any():
+            return None
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+
+        # (L, n_st, k) station visibility of each orbit at its own time.
+        tidx = [eng._tidx(float(orbit_t[l])) for l in range(L)]
+        vis_rows = np.stack([
+            eng.vis[:, eng.orbit_slice(l), tidx[l]] for l in range(L)])
+        any_vis = vis_rows.any(axis=1)                       # (L, k)
+        sizes = eng.sizes.reshape(L, k)
+
+        lam, seg_mass = chain_stats(any_vis, sizes, cfg.partial_mode)
+        mu = mu_from_chain(lam, seg_mass, sizes,
+                           cfg.orbit_weighting).reshape(-1)
+        seg_end = segment_ends(any_vis)                      # (L, k)
+
+        # Latency: each segment hops its run over the ISL ring, then
+        # uploads through the first station that sees its terminal
+        # satellite (Eq. 15 dedup: IDs filter duplicates across HAPs).
+        train_t = eng.train_time()
+        isl = eng.isl_delay()
+        round_end = t
+        for l in range(L):
+            tl = float(orbit_t[l])
+            owner = np.where(vis_rows[l].any(axis=0),
+                             vis_rows[l].argmax(axis=0), 0)
+            counts = np.bincount(seg_end[l], minlength=k)
+            for end in np.unique(seg_end[l]):
+                lat = (train_t + int(counts[end]) * isl
+                       + eng.shl_delay(int(owner[end]),
+                                       l * k + int(end), tl))
+                round_end = max(round_end, tl + lat)
+        return RoundPlan(orbit_t, mu, round_end)
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        cfg = eng.cfg
+        plan = self.plan_round(eng, s.t)
+        if plan is None:
+            s.t = eng.horizon_s + 1.0
+            return False
+        stacked = eng.train_all(s.params)
+        s.params = eng.combine(stacked, plan.mu)
+        # inter-HAP ring (down + up) before the next round can start.
+        ring = 2 * (len(eng.stations) - 1) * eng.ihl_delay()
+        s.t = plan.round_end + ring
+        s.events += 1
+        if (s.events - 1) % cfg.eval_every_rounds == 0:
+            eng.eval_and_record(s)
+        return True

@@ -1,0 +1,52 @@
+"""FedISL (Razmi et al.): intra-orbit ISL relaying to a star PS.
+
+Non-ideal: GS at Rolla — each orbit must wait for ANY member to be
+visible; all K models relay through that member (no partial aggregation,
+so K full models cross the SGL). Ideal: MEO PS above the equator
+(persistent visibility for most orbits) — same rules, ideal station
+config (``stations="meo"``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.sim.strategies.base import RunState, Strategy, register_strategy
+
+
+@register_strategy("fedisl")
+class FedIsl(Strategy):
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        cfg = eng.cfg
+        k = cfg.sats_per_orbit
+        orbit_t = eng.first_orbit_contacts(s.t)
+        if np.isnan(orbit_t).any():
+            s.t = eng.horizon_s + 1.0
+            return False
+        stacked = eng.train_all(s.params)
+        # Round latency: train + relay K models halfway around the ring
+        # + K full-model uploads through the gateway's single SGL.
+        isl = eng.isl_delay()
+        lat = 0.0
+        for l in range(cfg.num_orbits):
+            sl = eng.orbit_slice(l)
+            tl = float(orbit_t[l])
+            vis_l = eng.vis_at(tl).any(axis=0)
+            gw = int(np.nonzero(vis_l[sl])[0][0]) + sl.start
+            up = eng.shl_delay(0, gw, tl)
+            lat = max(lat, (tl - s.t) + eng.train_time()
+                      + (k // 2) * isl + k * up)
+        # FedAvg aggregate of ALL satellites (FedISL is lossless).
+        s.params = eng.combine(stacked, eng.sizes / eng.sizes.sum())
+        s.t += lat
+        s.events += 1
+        eng.eval_and_record(s)
+        return True
+
+
+@register_strategy("fedisl_ideal")
+class FedIslIdeal(FedIsl):
+    """Identical rules; the 'ideal' part is the MEO PS above the equator,
+    which is pure station config (``stations="meo"``)."""

@@ -1,0 +1,43 @@
+"""FedSat (Razmi et al., async, ideal NP GS): per-orbit periodic visits;
+the PS folds each orbit's fresh average in as it arrives."""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.treeops import tree_add, tree_scale
+from repro.sim.strategies.base import RunState, Strategy, register_strategy
+
+
+@register_strategy("fedsat")
+class FedSat(Strategy):
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        cfg = eng.cfg
+        k = cfg.sats_per_orbit
+        # per-orbit last-known global (staleness source)
+        base = s.scratch.setdefault("orbit_base",
+                                    [s.params] * cfg.num_orbits)
+        vis = eng.vis_at(s.t).any(axis=0)
+        visited = [l for l in range(cfg.num_orbits)
+                   if vis[eng.orbit_slice(l)].any()]
+        if not visited:
+            s.t += cfg.time_step_s
+            return True
+        for l in visited:
+            sl = eng.orbit_slice(l)
+            stacked = eng.train_orbit(base[l], l)
+            orbit_model = eng.combine(
+                stacked, eng.sizes[sl] / eng.sizes[sl].sum())
+            # async fold: global <- (1-rho) global + rho orbit_model
+            rho = eng.sizes[sl].sum() / eng.sizes.sum()
+            s.params = tree_add(tree_scale(s.params, 1 - rho),
+                                tree_scale(orbit_model, rho))
+            base[l] = s.params
+            s.events += 1
+        gw_delay = (eng.train_time() + (k // 2) * eng.isl_delay()
+                    + k * eng.shl_delay(0, 0, s.t))
+        s.t += max(gw_delay, cfg.time_step_s)
+        eng.eval_and_record(s)
+        return True

@@ -1,0 +1,52 @@
+"""FedSpace (So et al.): semi-asynchronous buffered aggregation against
+a GS with scheduled aggregation; stale updates are down-weighted."""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.treeops import tree_add, tree_sub
+from repro.sim.strategies.base import RunState, Strategy, register_strategy
+
+
+@register_strategy("fedspace")
+class FedSpace(Strategy):
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        cfg = eng.cfg
+        sc = s.scratch
+        if not sc:
+            sc.update(
+                buffer=[],                 # (sat, delta, round_tag)
+                sat_base=[s.params] * eng.n_sats,
+                sat_base_tag=np.zeros(eng.n_sats, dtype=int),
+                tag=0,
+                last_seen=np.zeros(eng.n_sats, dtype=bool),
+            )
+        vis = eng.vis_at(s.t).any(axis=0)
+        newly = vis & ~sc["last_seen"]      # rising edge: a new pass
+        sc["last_seen"] = vis
+        for sat in np.nonzero(newly)[0]:
+            sat = int(sat)
+            new_p, _ = eng.trainer.train_client(
+                sc["sat_base"][sat], eng.fd, sat, cfg.local_steps, eng.rng)
+            delta = tree_sub(new_p, sc["sat_base"][sat])
+            sc["buffer"].append((sat, delta, int(sc["sat_base_tag"][sat])))
+            sc["sat_base"][sat] = s.params
+            sc["sat_base_tag"][sat] = sc["tag"]
+        if len(sc["buffer"]) >= max(1, int(cfg.buffer_fraction
+                                           * eng.n_sats)):
+            total = eng.sizes.sum()
+            wts = np.array([
+                eng.sizes[sat] / total
+                / (1.0 + sc["tag"] - btag) ** cfg.staleness_power
+                for sat, _, btag in sc["buffer"]])
+            stacked = eng.trainer.stack([d for _, d, _ in sc["buffer"]])
+            s.params = tree_add(s.params, eng.combine(stacked, wts))
+            sc["buffer"].clear()
+            sc["tag"] += 1
+            s.events += 1
+            eng.eval_and_record(s)
+        s.t += cfg.time_step_s
+        return True

@@ -1,450 +1,24 @@
-"""Event-driven FL-Satcom timeline simulator (paper §IV).
+"""Backwards-compatible import surface for the timeline simulator.
 
-Reproduces the paper's evaluation methodology: satellites move on a
-Walker constellation, visibility windows against GS/HAP stations gate
-when models can move, link budgets (Table I) convert model payloads into
-transfer delays, and satellites run *real* local SGD on their partition
-of the digits dataset. The output is accuracy vs. *simulated* hours.
+The 450-line strategy monolith that used to live here was rebuilt as a
+vectorized engine + strategy registry:
 
-Strategies: fedhap | fedisl | fedisl_ideal | fedsat | fedspace.
+- ``repro.sim.engine`` — :class:`RoundEngine` (= ``SatcomSimulator``):
+  world state, next-contact tables, einsum aggregation, the run loop;
+- ``repro.sim.strategies`` — registered per-method scheduling/weighting
+  rules (fedhap | fedisl | fedisl_ideal | fedsat | fedspace).
+
+Existing imports (``from repro.sim.timeline import SatcomSimulator``)
+keep working; new code should import from ``repro.sim`` or the modules
+above directly.
 """
-from __future__ import annotations
-
-import dataclasses
-import math
-from typing import Any, Optional
-
-import numpy as np
-
-from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
-from repro.configs.paper_mlp import CONFIG as MLP_CONFIG
-from repro.core.aggregation import (
-    dedup_set_cover,
-    full_aggregate,
-    segment_upload_weights,
+from repro.sim.engine import (
+    RoundEngine,
+    SatcomSimulator,
+    SimConfig,
+    SimResult,
+    _make_stations,
 )
-from repro.data import (
-    FederatedData,
-    make_digits_dataset,
-    partition_iid,
-    partition_noniid_by_orbit,
-)
-from repro.models import CNN, MLP
-from repro.orbits import (
-    Station,
-    WalkerConstellation,
-    model_transfer_delay_s,
-    visibility_mask,
-)
-from repro.orbits.visibility import DALLAS, ROLLA
-from repro.sim.trainer import LocalTrainer
 
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    strategy: str = "fedhap"
-    stations: str = "one_hap"     # gs | one_hap | two_hap | gs_np | meo
-    model_kind: str = "cnn"       # cnn | mlp
-    iid: bool = False
-    partial_mode: str = "paper"   # Eq. 14 gamma mode
-    orbit_weighting: str = "paper"
-    # constellation (paper §IV-A)
-    num_orbits: int = 5
-    sats_per_orbit: int = 8
-    altitude_m: float = 2_000_000.0
-    inclination_deg: float = 80.0
-    # training
-    num_samples: int = 70_000
-    local_steps: int = 54         # ~1 epoch of a 1750-sample shard @ bs 32
-    batch_size: int = 32
-    learning_rate: float = 0.01
-    compute_s_per_step: float = 0.1
-    # timeline
-    horizon_h: float = 72.0
-    max_rounds: int = 2000
-    time_step_s: float = 30.0
-    eval_every_rounds: int = 1
-    eval_samples: int = 4000
-    target_accuracy: float = 0.995
-    seed: int = 0
-    # fedspace / fedsat knobs
-    buffer_fraction: float = 0.5
-    staleness_power: float = 0.5
-
-
-@dataclasses.dataclass
-class SimResult:
-    history: list[tuple[float, int, float]]   # (sim_hours, round, accuracy)
-    final_accuracy: float
-    rounds: int
-    sim_hours: float
-
-    def time_to_accuracy(self, acc: float) -> Optional[float]:
-        for t, _, a in self.history:
-            if a >= acc:
-                return t
-        return None
-
-
-def _make_stations(kind: str) -> list[Station]:
-    if kind == "gs":
-        return [Station("gs-rolla", *ROLLA, altitude_m=0.0)]
-    if kind == "one_hap":
-        return [Station("hap-rolla", *ROLLA, altitude_m=20e3)]
-    if kind == "two_hap":
-        return [Station("hap-rolla", *ROLLA, altitude_m=20e3),
-                Station("hap-dallas", *DALLAS, altitude_m=20e3)]
-    if kind == "gs_np":   # FedSat/FedISL ideal: GS at the North Pole
-        return [Station("gs-np", 89.9, 0.0, altitude_m=0.0)]
-    if kind == "meo":     # FedISL ideal: MEO PS above the equator — modeled
-        return [Station("meo", 0.0, 0.0, altitude_m=8_000_000.0,
-                        min_elevation_deg=0.0)]
-    raise ValueError(kind)
-
-
-class SatcomSimulator:
-    """Holds the physical world + dataset and runs one strategy."""
-
-    def __init__(self, cfg: SimConfig):
-        self.cfg = cfg
-        self.constellation = WalkerConstellation(
-            cfg.num_orbits, cfg.sats_per_orbit, cfg.altitude_m,
-            cfg.inclination_deg)
-        self.stations = _make_stations(cfg.stations)
-        self.n_sats = len(self.constellation)
-        rng = np.random.default_rng(cfg.seed)
-        self.rng = rng
-
-        images, labels = make_digits_dataset(cfg.num_samples, seed=cfg.seed)
-        n_eval = cfg.eval_samples
-        self.eval_images, self.eval_labels = images[:n_eval], labels[:n_eval]
-        tr_img, tr_lab = images[n_eval:], labels[n_eval:]
-        if cfg.iid:
-            parts = partition_iid(tr_lab, self.n_sats, cfg.seed)
-        else:
-            parts = partition_noniid_by_orbit(
-                tr_lab, cfg.num_orbits, cfg.sats_per_orbit, cfg.seed)
-        self.fd = FederatedData(tr_img, tr_lab, parts)
-        self.sizes = self.fd.client_sizes().astype(np.float64)
-
-        model = (CNN(CNN_CONFIG) if cfg.model_kind == "cnn"
-                 else MLP(MLP_CONFIG))
-        self.trainer = LocalTrainer(model, cfg.learning_rate, cfg.batch_size)
-        self.model_bits = model.count_params() * 32
-
-        # Precompute visibility on the timeline grid.
-        n_steps = int(cfg.horizon_h * 3600 / cfg.time_step_s) + 2
-        self.grid_t = np.arange(n_steps) * cfg.time_step_s
-        self.vis = visibility_mask(self.stations, self.constellation,
-                                   self.grid_t)  # (n_st, n_sat, T)
-
-        # Static intra-orbit ISL geometry (circular orbits: constant).
-        a, b = (self.constellation.orbit_members(0)[0],
-                self.constellation.orbit_members(0)[1])
-        self.isl_dist = self.constellation.isl_distance_m(a, b, 0.0)
-
-    # ------------------------------------------------------------ helpers
-    def _tidx(self, t_s: float) -> int:
-        return min(int(t_s / self.cfg.time_step_s), self.vis.shape[2] - 1)
-
-    def vis_at(self, t_s: float) -> np.ndarray:
-        """(n_stations, n_sats) bool."""
-        return self.vis[:, :, self._tidx(t_s)]
-
-    def shl_delay(self, st_i: int, sat_i: int, t_s: float) -> float:
-        st = self.stations[st_i]
-        sat = self.constellation.satellites[sat_i]
-        d = float(np.linalg.norm(
-            st.position_eci(t_s) - sat.position_eci(t_s)))
-        kind = "fso" if st.is_hap else "rf"
-        return model_transfer_delay_s(self.model_bits // 32, d, kind)
-
-    def isl_delay(self) -> float:
-        return model_transfer_delay_s(self.model_bits // 32, self.isl_dist,
-                                      "fso")
-
-    def ihl_delay(self) -> float:
-        if len(self.stations) < 2:
-            return 0.0
-        d = float(np.linalg.norm(
-            self.stations[0].position_eci(0.0)
-            - self.stations[1].position_eci(0.0)))
-        return model_transfer_delay_s(self.model_bits // 32, d, "fso")
-
-    def train_time(self) -> float:
-        return self.cfg.local_steps * self.cfg.compute_s_per_step
-
-    def orbit_slice(self, l: int) -> slice:
-        k = self.cfg.sats_per_orbit
-        return slice(l * k, (l + 1) * k)
-
-    # -------------------------------------------------------------- run
-    def run(self) -> SimResult:
-        strat = {
-            "fedhap": self._run_fedhap,
-            "fedisl": lambda: self._run_fedisl(ideal=False),
-            "fedisl_ideal": lambda: self._run_fedisl(ideal=True),
-            "fedsat": self._run_fedsat,
-            "fedspace": self._run_fedspace,
-        }[self.cfg.strategy]
-        return strat()
-
-    # ----------------------------------------------------------- FedHAP
-    def _run_fedhap(self) -> SimResult:
-        cfg = self.cfg
-        params = self.trainer.init(cfg.seed)
-        t = 0.0
-        history = []
-        acc = 0.0
-        k = cfg.sats_per_orbit
-        horizon_s = cfg.horizon_h * 3600
-        for rnd in range(cfg.max_rounds):
-            if t > horizon_s or acc >= cfg.target_accuracy:
-                break
-            # Eq. 15: the source HAP accumulates partials until every
-            # satellite is covered — each orbit reports at its own first
-            # visibility; the round completes when the LAST orbit reports
-            # (paper Alg. 1 line 18 reschedules until the cover is full).
-            orbit_t = np.full(cfg.num_orbits, np.nan)
-            for l in range(cfg.num_orbits):
-                sl = self.orbit_slice(l)
-                tl = t
-                while tl <= horizon_s:
-                    if self.vis_at(tl)[:, sl].any():
-                        orbit_t[l] = tl
-                        break
-                    tl += cfg.time_step_s
-            if np.isnan(orbit_t).any():
-                t = horizon_s + 1
-                break
-
-            # --- every satellite retrains w^beta (vmapped).
-            stacked = self.trainer.stack([params] * self.n_sats)
-            stacked, _ = self.trainer.train_clients(
-                stacked, self.fd, list(range(self.n_sats)),
-                cfg.local_steps, self.rng)
-
-            # --- intra-orbit chains -> per-orbit partials + latency.
-            per_orbit: dict[int, list[tuple[float, Any]]] = {}
-            isl = self.isl_delay()
-            train_t = self.train_time()
-            round_end = t
-            for l in range(cfg.num_orbits):
-                sl = self.orbit_slice(l)
-                tl = float(orbit_t[l])
-                vis_l = self.vis_at(tl)              # (n_st, n_sat)
-                any_vis = vis_l.any(axis=0)
-                # Dedup (Eq. 15): visible sat reports to the first station
-                # that sees it (IDs filter duplicates across HAPs).
-                owner = np.full(self.n_sats, -1)
-                for si in range(len(self.stations)):
-                    newly = vis_l[si] & (owner < 0)
-                    owner[newly] = si
-                lam, seg_end, seg_mass = segment_upload_weights(
-                    any_vis[sl], self.sizes[sl], cfg.partial_mode)
-                parts = []
-                for end in np.unique(seg_end[seg_end >= 0]):
-                    members = np.nonzero(seg_end == end)[0]
-                    model = None
-                    for m in members:
-                        leaf = self.trainer.unstack(stacked, l * k + m)
-                        contrib = _tree_scale_np(leaf, lam[m])
-                        model = (contrib if model is None
-                                 else _tree_add_np(model, contrib))
-                    # chain latency: hops through the run + SHL upload.
-                    up_st = owner[l * k + end]
-                    up_st = up_st if up_st >= 0 else 0
-                    lat = (train_t + len(members) * isl
-                           + self.shl_delay(up_st, l * k + end, tl))
-                    round_end = max(round_end, tl + lat)
-                    parts.append((float(seg_mass[members[0]]), model))
-                per_orbit[l] = parts
-
-            # --- inter-HAP ring (down + up) and aggregation.
-            ring = 2 * (len(self.stations) - 1) * self.ihl_delay()
-            params = full_aggregate(per_orbit, cfg.orbit_weighting)
-            t = round_end + ring
-            if rnd % cfg.eval_every_rounds == 0:
-                acc = self.trainer.evaluate(params, self.eval_images,
-                                            self.eval_labels)
-                history.append((t / 3600.0, rnd + 1, acc))
-        return SimResult(history, acc, len(history), t / 3600.0)
-
-    # ----------------------------------------------------------- FedISL
-    def _run_fedisl(self, ideal: bool) -> SimResult:
-        """Razmi et al.: intra-orbit ISL relaying to a star PS.
-
-        Non-ideal: GS at Rolla — each orbit must wait for ANY member to be
-        visible; all K models relay through that member (no partial
-        aggregation, so K full models cross the SGL). Ideal: MEO PS above
-        the equator (persistent visibility for most orbits).
-        """
-        cfg = self.cfg
-        params = self.trainer.init(cfg.seed)
-        t = 0.0
-        history = []
-        acc = 0.0
-        k = cfg.sats_per_orbit
-        isl = self.isl_delay()
-        horizon_s = cfg.horizon_h * 3600
-        for rnd in range(cfg.max_rounds):
-            if t > horizon_s or acc >= cfg.target_accuracy:
-                break
-            # Each orbit reports at its own first visibility; the round
-            # completes when the last orbit has relayed all K models.
-            orbit_t = np.full(cfg.num_orbits, np.nan)
-            for l in range(cfg.num_orbits):
-                sl = self.orbit_slice(l)
-                tl = t
-                while tl <= horizon_s:
-                    if self.vis_at(tl)[:, sl].any():
-                        orbit_t[l] = tl
-                        break
-                    tl += cfg.time_step_s
-            if np.isnan(orbit_t).any():
-                t = horizon_s + 1
-                break
-            stacked = self.trainer.stack([params] * self.n_sats)
-            stacked, _ = self.trainer.train_clients(
-                stacked, self.fd, list(range(self.n_sats)),
-                cfg.local_steps, self.rng)
-            # round latency: train + relay K models halfway around the
-            # ring + K uploads through one SGL.
-            lat = 0.0
-            for l in range(cfg.num_orbits):
-                sl = self.orbit_slice(l)
-                tl = float(orbit_t[l])
-                vis_l = self.vis_at(tl).any(axis=0)
-                gw = int(np.nonzero(vis_l[sl])[0][0]) + l * k
-                up = self.shl_delay(0, gw, tl)
-                lat = max(lat, (tl - t) + self.train_time()
-                          + (k // 2) * isl + k * up)
-            # FedAvg aggregate of ALL satellites (FedISL is lossless).
-            w = self.sizes / self.sizes.sum()
-            models = [self.trainer.unstack(stacked, i)
-                      for i in range(self.n_sats)]
-            params = _tree_weighted_sum_np(models, w)
-            t += lat
-            acc = self.trainer.evaluate(params, self.eval_images,
-                                        self.eval_labels)
-            history.append((t / 3600.0, rnd + 1, acc))
-        return SimResult(history, acc, len(history), t / 3600.0)
-
-    # ----------------------------------------------------------- FedSat
-    def _run_fedsat(self) -> SimResult:
-        """Razmi et al. (async, ideal NP GS): per-orbit periodic visits;
-        the PS folds each orbit's fresh average in as it arrives."""
-        cfg = self.cfg
-        params = self.trainer.init(cfg.seed)
-        t = 0.0
-        history = []
-        acc = 0.0
-        k = cfg.sats_per_orbit
-        n_evt = 0
-        # per-orbit last-known global (staleness source)
-        orbit_base = [params] * cfg.num_orbits
-        while t <= cfg.horizon_h * 3600 and n_evt < cfg.max_rounds:
-            if acc >= cfg.target_accuracy:
-                break
-            # next orbit visit: first time any member of each orbit visible
-            vis = self.vis_at(t).any(axis=0)
-            visited = [l for l in range(cfg.num_orbits)
-                       if vis[self.orbit_slice(l)].any()]
-            if not visited:
-                t += cfg.time_step_s
-                continue
-            for l in visited:
-                sl = self.orbit_slice(l)
-                clients = list(range(sl.start, sl.stop))
-                stacked = self.trainer.stack([orbit_base[l]] * k)
-                stacked, _ = self.trainer.train_clients(
-                    stacked, self.fd, clients, cfg.local_steps, self.rng)
-                w = self.sizes[sl] / self.sizes[sl].sum()
-                orbit_model = _tree_weighted_sum_np(
-                    [self.trainer.unstack(stacked, i) for i in range(k)], w)
-                # async fold: global <- (1-rho) global + rho orbit_model
-                rho = self.sizes[sl].sum() / self.sizes.sum()
-                params = _tree_add_np(
-                    _tree_scale_np(params, 1 - rho),
-                    _tree_scale_np(orbit_model, rho))
-                orbit_base[l] = params
-                n_evt += 1
-            gw_delay = self.train_time() + (k // 2) * self.isl_delay() + \
-                k * self.shl_delay(0, 0, t)
-            t += max(gw_delay, cfg.time_step_s)
-            acc = self.trainer.evaluate(params, self.eval_images,
-                                        self.eval_labels)
-            history.append((t / 3600.0, n_evt, acc))
-        return SimResult(history, acc, len(history), t / 3600.0)
-
-    # --------------------------------------------------------- FedSpace
-    def _run_fedspace(self) -> SimResult:
-        """So et al.: semi-asynchronous buffered aggregation against a GS
-        with scheduled aggregation; stale updates are down-weighted."""
-        cfg = self.cfg
-        params = self.trainer.init(cfg.seed)
-        t = 0.0
-        history = []
-        acc = 0.0
-        buffer: list[tuple[int, Any, int]] = []   # (sat, delta, round_tag)
-        sat_base: list[Any] = [params] * self.n_sats
-        sat_base_tag = np.zeros(self.n_sats, dtype=int)
-        tag = 0
-        n_agg = 0
-        last_seen = np.zeros(self.n_sats, dtype=bool)
-        while t <= cfg.horizon_h * 3600 and n_agg < cfg.max_rounds:
-            if acc >= cfg.target_accuracy:
-                break
-            vis = self.vis_at(t).any(axis=0)
-            newly = vis & ~last_seen          # rising edge: a new pass
-            last_seen = vis
-            for s in np.nonzero(newly)[0]:
-                new_p, _ = self.trainer.train_client(
-                    sat_base[s], self.fd, int(s), cfg.local_steps, self.rng)
-                delta = _tree_sub_np(new_p, sat_base[s])
-                buffer.append((int(s), delta, int(sat_base_tag[s])))
-                sat_base[s] = params
-                sat_base_tag[s] = tag
-            if len(buffer) >= max(1, int(cfg.buffer_fraction
-                                         * self.n_sats)):
-                total = self.sizes.sum()
-                upd = None
-                for s, delta, btag in buffer:
-                    stale = tag - btag
-                    wgt = (self.sizes[s] / total
-                           / (1.0 + stale) ** cfg.staleness_power)
-                    term = _tree_scale_np(delta, wgt)
-                    upd = term if upd is None else _tree_add_np(upd, term)
-                params = _tree_add_np(params, upd)
-                buffer.clear()
-                tag += 1
-                n_agg += 1
-                acc = self.trainer.evaluate(params, self.eval_images,
-                                            self.eval_labels)
-                history.append((t / 3600.0, n_agg, acc))
-            t += cfg.time_step_s
-        return SimResult(history, acc, len(history), t / 3600.0)
-
-
-# ---------------------------------------------------------------- tree ops
-def _tree_scale_np(tree, s):
-    import jax
-    return jax.tree.map(lambda x: x * s, tree)
-
-
-def _tree_add_np(a, b):
-    import jax
-    return jax.tree.map(lambda x, y: x + y, a, b)
-
-
-def _tree_sub_np(a, b):
-    import jax
-    return jax.tree.map(lambda x, y: x - y, a, b)
-
-
-def _tree_weighted_sum_np(models, weights):
-    acc = None
-    for m, w in zip(models, weights):
-        term = _tree_scale_np(m, float(w))
-        acc = term if acc is None else _tree_add_np(acc, term)
-    return acc
+__all__ = ["RoundEngine", "SatcomSimulator", "SimConfig", "SimResult",
+           "_make_stations"]

@@ -1,0 +1,42 @@
+"""Optional-``hypothesis`` import surface for the test suite.
+
+``hypothesis`` is an optional extra (see pyproject ``[test]``): when it
+is installed the real ``given``/``settings``/``st`` are re-exported and
+property tests run normally; when it is absent the decorators degrade to
+``pytest.mark.skip`` so the property tests *skip* while every
+deterministic test in the same module still collects and runs
+(``pytest.importorskip`` at module scope would throw those away too).
+
+Usage in a test module::
+
+    from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (optional extra)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time:
+        every attribute is a callable returning None (the values are
+        never drawn because @given skips the test)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,102 @@
+"""Property tests for FedHAP aggregation math (Eq. 14-16).
+
+Requires the optional ``hypothesis`` extra; the whole module skips when
+it is absent (deterministic coverage lives in ``test_aggregation.py``).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import (
+    chain_weights,
+    full_aggregate,
+    partial_aggregate,
+    segment_upload_weights,
+)
+
+
+class TestChainWeights:
+    @given(
+        sizes=st.lists(st.floats(1.0, 1000.0), min_size=1, max_size=8),
+        mode=st.sampled_from(["paper", "exact"]),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_weights_sum_to_one(self, sizes, mode):
+        lam = chain_weights(sizes, m_orbit_total=sum(sizes) * 2.0, mode=mode)
+        assert lam.shape == (len(sizes),)
+        np.testing.assert_allclose(lam.sum(), 1.0, rtol=1e-12)
+        assert (lam >= 0).all()
+
+    @given(sizes=st.lists(st.floats(1.0, 100.0), min_size=1, max_size=6))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_sequential_recursion(self, sizes):
+        """chain_weights must reproduce the literal Eq.-14 recursion."""
+        m_orbit = sum(sizes) * 1.5
+        rng = np.random.default_rng(0)
+        models = [rng.normal(size=4) for _ in sizes]
+        acc, m_acc = models[0], sizes[0]
+        for w_new, m_new in zip(models[1:], sizes[1:]):
+            acc, m_acc = partial_aggregate(
+                acc, w_new, m_new, m_orbit, m_acc, mode="paper")
+        lam = chain_weights(sizes, m_orbit, mode="paper")
+        np.testing.assert_allclose(
+            acc, sum(l * m for l, m in zip(lam, models)), rtol=1e-9)
+
+    @given(sizes=st.lists(st.floats(1.0, 100.0), min_size=1, max_size=6))
+    @settings(max_examples=30, deadline=None)
+    def test_exact_mode_is_weighted_mean(self, sizes):
+        """The beyond-paper 'exact' recursion telescopes to the weighted
+        mean — the property the paper's recursion lacks."""
+        rng = np.random.default_rng(1)
+        models = [rng.normal(size=3) for _ in sizes]
+        acc, m_acc = models[0], sizes[0]
+        for w_new, m_new in zip(models[1:], sizes[1:]):
+            acc, m_acc = partial_aggregate(
+                acc, w_new, m_new, sum(sizes), m_acc, mode="exact")
+        want = sum(m * w for m, w in zip(sizes, models)) / sum(sizes)
+        np.testing.assert_allclose(acc, want, rtol=1e-9)
+
+
+class TestSegments:
+    @given(
+        k=st.integers(2, 8),
+        seed=st.integers(0, 100),
+        mode=st.sampled_from(["paper", "exact"]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_full_coverage_when_any_visible(self, k, seed, mode):
+        rng = np.random.default_rng(seed)
+        visible = rng.random(k) < 0.4
+        if not visible.any():
+            visible[rng.integers(k)] = True
+        sizes = rng.uniform(1, 50, size=k)
+        lam, seg_end, seg_mass = segment_upload_weights(visible, sizes, mode)
+        # Everyone is covered; segment ends are visible satellites.
+        assert (seg_end >= 0).all()
+        assert visible[seg_end].all()
+        # Within every segment, weights sum to 1 and masses add up.
+        for end in np.unique(seg_end):
+            members = seg_end == end
+            np.testing.assert_allclose(lam[members].sum(), 1.0, rtol=1e-9)
+            np.testing.assert_allclose(
+                seg_mass[members], sizes[members].sum(), rtol=1e-9)
+
+
+class TestFullAggregate:
+    @given(seed=st.integers(0, 50))
+    @settings(max_examples=20, deadline=None)
+    def test_full_aggregate_weights_sum_to_one(self, seed):
+        rng = np.random.default_rng(seed)
+        per_orbit = {}
+        for l in range(rng.integers(1, 4)):
+            per_orbit[l] = [
+                (float(rng.uniform(1, 10)), np.ones(3))
+                for _ in range(rng.integers(1, 4))
+            ]
+        for mode in ("paper", "global"):
+            out = full_aggregate(per_orbit, mode)
+            np.testing.assert_allclose(out, np.ones(3), rtol=1e-9)

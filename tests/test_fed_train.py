@@ -25,7 +25,7 @@ def setup():
     cmap = ConstellationMeshMap(n_orbits=2, sats_per_orbit=2, n_pods=1)
     fed_cfg = FedTrainConfig(
         round_cfg=FedRoundConfig(cmap=cmap, ship_global_echo=False),
-        learning_rate=0.05)
+        learning_rate=0.1, local_steps=2)
     return cfg, model, cmap, fed_cfg
 
 
@@ -37,12 +37,13 @@ class TestLogicalRound:
         sizes = jnp.ones(4)
         rng = np.random.default_rng(0)
         losses = []
-        for rnd in range(6):
+        for rnd in range(8):
             batch = make_batches(cfg, 4, 2, 32, rnd, cfg.vocab_size)
             vis = jnp.asarray(_ensure_coverage(rng, cmap, 0.5))
             params_S, m = step(params_S, batch, sizes, vis)
             losses.append(float(m["local_loss"]))
-        assert losses[-1] < losses[0], losses
+        # per-round batches differ, so compare window means, not endpoints
+        assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
 
     def test_round_synchronizes_replicas(self, setup):
         cfg, model, cmap, fed_cfg = setup

@@ -10,8 +10,10 @@ QUICK = dict(num_samples=3000, eval_samples=600, local_steps=6,
 
 @pytest.fixture(scope="module")
 def fedhap_result():
+    # more local SGD than the shared QUICK tier: the accuracy assertion
+    # needs headroom above 10-class chance on every CPU backend
     cfg = SimConfig(strategy="fedhap", stations="one_hap", max_rounds=4,
-                    **QUICK)
+                    **{**QUICK, "local_steps": 16})
     return SatcomSimulator(cfg).run()
 
 

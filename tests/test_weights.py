@@ -1,0 +1,215 @@
+"""Tests for the closed-form weights engine + vectorized sim machinery.
+
+Covers the ISSUE-1 acceptance points: the three-way equivalence
+(timeline weights == segment_upload_weights == fused-mesh mu) on random
+visibility masks, Eq. 15 edge cases, next-contact tables, and the
+strategy registry. (The in-shard_map fused round is additionally proven
+equal to the faithful ring in tests/test_fedhap_mesh.py.)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import segment_upload_weights
+from repro.core.weights import (
+    chain_stats,
+    chain_weights,
+    mu_from_chain,
+    mu_weights,
+    segment_ends,
+)
+from repro.orbits import next_contact_table
+
+
+def _random_constellation(rng, L, k, ensure_cover=True):
+    vis = rng.random(L * k) < 0.45
+    if ensure_cover:
+        for l in range(L):
+            if not vis[l * k:(l + 1) * k].any():
+                vis[l * k + rng.integers(k)] = True
+    sizes = rng.uniform(1, 50, L * k)
+    return vis, sizes
+
+
+class TestThreeWayEquivalence:
+    @pytest.mark.parametrize("partial_mode", ["paper", "exact"])
+    @pytest.mark.parametrize("orbit_weighting", ["paper", "global"])
+    def test_numpy_jnp_and_segment_paths_agree(self, partial_mode,
+                                               orbit_weighting):
+        """mu_weights(np) == mu_weights(jnp: the fused-mesh math) ==
+        segment_upload_weights x Eq. 16, on random visibility masks."""
+        rng = np.random.default_rng(7)
+        for trial in range(25):
+            L, k = int(rng.integers(1, 5)), int(rng.integers(2, 9))
+            vis, sizes = _random_constellation(
+                rng, L, k, ensure_cover=bool(trial % 2))
+            mu_np = mu_weights(vis, sizes, k, partial_mode,
+                               orbit_weighting, xp=np)
+            mu_j = np.asarray(mu_weights(
+                jnp.asarray(vis), jnp.asarray(sizes, jnp.float32), k,
+                partial_mode, orbit_weighting, xp=jnp))
+            # reference: the per-orbit segment API + Eq. 16 by hand
+            want = np.zeros(L * k)
+            for l in range(L):
+                sl = slice(l * k, (l + 1) * k)
+                lam, _, seg_mass = segment_upload_weights(
+                    vis[sl], sizes[sl], partial_mode)
+                if orbit_weighting == "paper":
+                    want[sl] = lam * seg_mass / sizes[sl].sum() / L
+                else:
+                    want[sl] = lam * seg_mass / sizes.sum()
+            np.testing.assert_allclose(mu_np, want, rtol=1e-9,
+                                       err_msg=f"np trial {trial}")
+            np.testing.assert_allclose(mu_j, want, rtol=1e-4, atol=1e-7,
+                                       err_msg=f"jnp trial {trial}")
+
+    def test_timeline_plan_mu_matches_segment_math(self):
+        """The weights the simulator actually applies (FedHap.plan_round
+        on real orbital visibility) equal the segment-API reference."""
+        from repro.sim import SatcomSimulator, SimConfig
+        from repro.sim.strategies import FedHap
+
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        model_kind="mlp", num_samples=2000,
+                        eval_samples=400, num_orbits=3, sats_per_orbit=4,
+                        horizon_h=24.0, time_step_s=60.0, max_rounds=2)
+        eng = SatcomSimulator(cfg)
+        plan = FedHap().plan_round(eng, 0.0)
+        assert plan is not None
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        want = np.zeros(L * k)
+        for l in range(L):
+            sl = eng.orbit_slice(l)
+            vis_l = eng.vis_at(float(plan.orbit_t[l]))[:, sl].any(axis=0)
+            lam, _, seg_mass = segment_upload_weights(
+                vis_l, eng.sizes[sl], cfg.partial_mode)
+            want[sl.start:sl.stop] = (lam * seg_mass
+                                      / eng.sizes[sl].sum() / L)
+        np.testing.assert_allclose(plan.mu, want, rtol=1e-9)
+        np.testing.assert_allclose(plan.mu.sum(), 1.0, rtol=1e-9)
+
+
+class TestChainStats:
+    def test_matches_scalar_chain_weights(self):
+        """Batched closed form == the per-segment scalar recursion."""
+        rng = np.random.default_rng(3)
+        for _ in range(50):
+            k = int(rng.integers(2, 10))
+            vis = rng.random(k) < 0.5
+            if not vis.any():
+                vis[rng.integers(k)] = True
+            sizes = rng.uniform(1, 20, k)
+            lam, _ = chain_stats(vis[None], sizes[None], "paper")
+            m_orbit = sizes.sum()
+            for o in np.nonzero(vis)[0]:
+                members = [int(o)]
+                j = (o + 1) % k
+                while not vis[j]:
+                    members.append(int(j))
+                    j = (j + 1) % k
+                ref = chain_weights(sizes[members], m_orbit, "paper")
+                np.testing.assert_allclose(lam[0][members], ref, rtol=1e-12)
+
+    def test_uncovered_ring_is_zeroed(self):
+        lam, seg_mass = chain_stats(np.zeros((1, 5), bool), np.ones((1, 5)))
+        assert (lam == 0).all() and (seg_mass == 0).all()
+
+    def test_batched_rings_are_independent(self):
+        vis = np.array([[True, False, False], [False, True, True]])
+        sizes = np.array([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+        lam, seg = chain_stats(vis, sizes, "exact")
+        lam0, seg0 = chain_stats(vis[:1], sizes[:1], "exact")
+        np.testing.assert_allclose(lam[0], lam0[0])
+        np.testing.assert_allclose(seg[0], seg0[0])
+
+    def test_segment_ends_matrix(self):
+        vis = np.array([[True, False, True, False],
+                        [False, False, False, False]])
+        ends = segment_ends(vis)
+        np.testing.assert_array_equal(ends[0], [2, 2, 0, 0])
+        np.testing.assert_array_equal(ends[1], [-1, -1, -1, -1])
+
+    def test_mu_sums_to_one_under_full_cover(self):
+        rng = np.random.default_rng(11)
+        vis, sizes = _random_constellation(rng, 4, 6)
+        for pm in ("paper", "exact"):
+            for ow in ("paper", "global"):
+                mu = mu_weights(vis, sizes, 6, pm, ow, xp=np)
+                np.testing.assert_allclose(mu.sum(), 1.0, rtol=1e-9,
+                                           err_msg=f"{pm}/{ow}")
+
+
+class TestNextContactTable:
+    def test_matches_linear_scan(self):
+        rng = np.random.default_rng(5)
+        vis = rng.random((3, 40)) < 0.2
+        nxt = next_contact_table(vis)
+        T = vis.shape[-1]
+        for r in range(3):
+            for i in range(T):
+                js = np.nonzero(vis[r, i:])[0]
+                want = i + js[0] if len(js) else T
+                assert nxt[r, i] == want
+
+    def test_engine_contacts_match_scan(self):
+        """first_orbit_contacts == the seed's per-round while-loop scan."""
+        from repro.sim import SatcomSimulator, SimConfig
+
+        cfg = SimConfig(strategy="fedhap", stations="one_hap",
+                        model_kind="mlp", num_samples=2000,
+                        eval_samples=400, num_orbits=3, sats_per_orbit=4,
+                        horizon_h=12.0, time_step_s=60.0, max_rounds=2)
+        eng = SatcomSimulator(cfg)
+
+        def scan(t):
+            out = np.full(cfg.num_orbits, np.nan)
+            for l in range(cfg.num_orbits):
+                sl = eng.orbit_slice(l)
+                tl = t
+                while tl <= eng.horizon_s:
+                    if eng.vis_at(tl)[:, sl].any():
+                        out[l] = tl
+                        break
+                    tl += cfg.time_step_s
+            return out
+
+        for t in (0.0, 1234.5, 3600.0, 7.2 * 3600, 11.9 * 3600):
+            np.testing.assert_allclose(
+                eng.first_orbit_contacts(t), scan(t), equal_nan=True,
+                err_msg=f"t={t}")
+
+
+class TestRegistry:
+    def test_builtins_resolve(self):
+        from repro.sim.strategies import STRATEGIES, get_strategy
+        for name in STRATEGIES:
+            assert get_strategy(name) is not None
+
+    def test_unknown_strategy_raises(self):
+        from repro.sim.strategies import get_strategy
+        with pytest.raises(ValueError, match="unknown strategy"):
+            get_strategy("fednope")
+
+    def test_custom_registration(self):
+        from repro.sim.strategies import (Strategy, get_strategy,
+                                          register_strategy)
+        from repro.sim.strategies.base import _REGISTRY
+
+        @register_strategy("_test_strat")
+        class Probe(Strategy):
+            def step(self, eng, s):
+                return False
+
+        try:
+            assert get_strategy("_test_strat") is Probe
+        finally:
+            _REGISTRY.pop("_test_strat", None)
+
+    def test_station_scenarios_are_config(self):
+        from repro.sim.engine import _make_stations
+        haps = _make_stations("haps:3")
+        assert len(haps) == 3 and all(s.is_hap for s in haps)
+        grid = _make_stations("grid:2x4")
+        assert len(grid) == 8 and not any(s.is_hap for s in grid)
+        with pytest.raises(ValueError):
+            _make_stations("nonsense")
