@@ -1,0 +1,211 @@
+"""Geometry-engine benchmark: batched grids vs per-pair Python, delay
+tables vs re-propagation, and a mega-constellation scenario sweep.
+
+Three sections, all recorded to ``BENCH_sim.json`` (schema documented in
+``benchmarks/README.md``) so the perf trajectory is tracked across PRs:
+
+- **grid_build** — wall time of the batched ``visibility_mask`` (one
+  stacked-ephemeris propagation + broadcasted elevation test) vs the
+  per-pair ``visibility_mask_pairwise`` reference, on a 20x40 Walker
+  shell by default (the acceptance scenario: batched must be >=5x).
+- **delay_table** — eager SHL-delay-table build time plus lookup
+  latency (``RoundEngine.shl_delay`` / batched ``shl_delays``) vs the
+  per-call re-propagating reference.
+- **sweep** — ``haps:N`` / ``grid:RxC`` station scenarios crossed with
+  large Walker shells: records grid-build time and scheduler-only
+  FedHAP rounds/sec (local SGD excluded, as in ``sim_wallclock``).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_geometry            # full
+  PYTHONPATH=src python -m benchmarks.bench_geometry --smoke    # CI tier
+  PYTHONPATH=src python -m benchmarks.bench_geometry --sim-wallclock
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.orbits import (
+    WalkerConstellation,
+    visibility_mask,
+    visibility_mask_pairwise,
+)
+from repro.sim import SimConfig
+from repro.sim.engine import RoundEngine, _make_stations
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+
+# Tiny dataset settings: these benches measure geometry + scheduling,
+# not SGD, so the FL side is kept as small as the engine allows.
+_SIM_LITE = dict(model_kind="mlp", num_samples=4000, eval_samples=500,
+                 iid=True)
+
+
+def _scenario_cfg(stations: str, shell: tuple[int, int],
+                  horizon_h: float, step_s: float) -> SimConfig:
+    return SimConfig(strategy="fedhap", stations=stations,
+                     num_orbits=shell[0], sats_per_orbit=shell[1],
+                     horizon_h=horizon_h, time_step_s=step_s, **_SIM_LITE)
+
+
+def bench_grid_build(stations: str, shell: tuple[int, int],
+                     horizon_h: float, step_s: float,
+                     check: bool = True) -> dict:
+    """Batched vs per-pair visibility-grid build on one scenario."""
+    sts = _make_stations(stations)
+    con = WalkerConstellation(shell[0], shell[1])
+    ts = np.arange(int(horizon_h * 3600 / step_s) + 2) * step_s
+    t0 = time.perf_counter()
+    batched = visibility_mask(sts, con, ts)
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pairwise = visibility_mask_pairwise(sts, con, ts)
+    pairwise_s = time.perf_counter() - t0
+    if check:
+        assert (batched == pairwise).all(), "batched grid != per-pair grid"
+    return {
+        "stations": stations, "shell": f"{shell[0]}x{shell[1]}",
+        "n_stations": len(sts), "n_sats": len(con), "T": len(ts),
+        "batched_s": round(batched_s, 4),
+        "pairwise_s": round(pairwise_s, 4),
+        "speedup": round(pairwise_s / batched_s, 2),
+    }
+
+
+def bench_delay_table(stations: str, shell: tuple[int, int],
+                      horizon_h: float, step_s: float,
+                      n_queries: int = 2000) -> dict:
+    """Delay-table build + lookup cost vs the re-propagating reference."""
+    cfg = _scenario_cfg(stations, shell, horizon_h, step_s)
+    t0 = time.perf_counter()
+    eng = RoundEngine(cfg)
+    init_s = time.perf_counter() - t0
+    T = len(eng.grid_t)
+    rng = np.random.default_rng(0)
+    st_i = rng.integers(0, len(eng.stations), n_queries)
+    sat_i = rng.integers(0, eng.n_sats, n_queries)
+    t_i = rng.integers(0, T, n_queries)
+    times = eng.grid_t[t_i]
+
+    t0 = time.perf_counter()
+    for a, b, t in zip(st_i, sat_i, times):
+        eng.shl_delay(int(a), int(b), float(t))
+    lookup_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    gathered = eng.shl_delays(st_i, sat_i, t_i)
+    gather_s = time.perf_counter() - t0
+    ref_n = min(n_queries, 200)       # the reference path is slow
+    t0 = time.perf_counter()
+    refs = [eng.shl_delay_reference(int(a), int(b), float(t))
+            for a, b, t in zip(st_i[:ref_n], sat_i[:ref_n], times[:ref_n])]
+    ref_s = (time.perf_counter() - t0) * (n_queries / ref_n)
+    assert np.allclose(gathered[:ref_n], refs, rtol=1e-5)
+    return {
+        "stations": stations, "shell": f"{shell[0]}x{shell[1]}",
+        "T": T, "eager_table": eng.shl_table is not None,
+        "engine_init_s": round(init_s, 4),
+        "lookup_us": round(lookup_s / n_queries * 1e6, 3),
+        "gather_us": round(gather_s / n_queries * 1e6, 3),
+        "reference_us": round(ref_s / n_queries * 1e6, 3),
+        "speedup": round(ref_s / lookup_s, 2),
+    }
+
+
+def bench_sweep(scenarios, horizon_h: float, step_s: float,
+                rounds: int = 10) -> list[dict]:
+    """Mega-constellation sweep: grid build + scheduler rounds/sec."""
+    from benchmarks.sim_wallclock import run_wallclock
+    out = []
+    for stations, shell in scenarios:
+        cfg = _scenario_cfg(stations, shell, horizon_h, step_s)
+        grid = bench_grid_build(stations, shell, horizon_h, step_s,
+                                check=False)
+        t0 = time.perf_counter()
+        res = run_wallclock(cfg, rounds=rounds, compare_legacy=False)
+        row = {
+            "stations": stations, "shell": f"{shell[0]}x{shell[1]}",
+            "n_stations": grid["n_stations"], "n_sats": grid["n_sats"],
+            "T": grid["T"],
+            "grid_build_s": grid["batched_s"],
+            "rounds": res["rounds"],
+            "rounds_per_sec": round(res["engine_rps"], 2),
+            "wall_s": round(time.perf_counter() - t0, 2),
+        }
+        out.append(row)
+        print(f"  sweep[{stations} x {row['shell']}]: "
+              f"grid {row['grid_build_s']:.3f}s, "
+              f"{row['rounds_per_sec']:.1f} rounds/s", flush=True)
+    return out
+
+
+def run(smoke: bool = False, sim_wallclock: bool = False,
+        rounds: int = 25) -> dict:
+    doc: dict = {"schema": 1, "smoke": smoke}
+
+    if smoke:
+        grid_scenarios = [("two_hap", (5, 8))]
+        sweep_scenarios = [("haps:4", (6, 10)), ("grid:3x6", (6, 10))]
+        horizon_h, step_s, sweep_rounds = 6.0, 60.0, 5
+    else:
+        grid_scenarios = [("two_hap", (5, 8)), ("two_hap", (20, 40)),
+                          ("grid:3x6", (20, 40))]
+        sweep_scenarios = [("haps:4", (10, 20)), ("grid:3x6", (10, 20)),
+                           ("haps:8", (20, 40)), ("grid:6x12", (20, 40))]
+        horizon_h, step_s, sweep_rounds = 12.0, 60.0, 10
+
+    doc["grid_build"] = []
+    for stations, shell in grid_scenarios:
+        row = bench_grid_build(stations, shell, horizon_h, step_s)
+        doc["grid_build"].append(row)
+        print(f"grid_build[{stations} x {row['shell']}]: "
+              f"batched {row['batched_s']:.3f}s vs per-pair "
+              f"{row['pairwise_s']:.3f}s ({row['speedup']:.1f}x)",
+              flush=True)
+
+    dt_shell = (5, 8) if smoke else (10, 20)
+    doc["delay_table"] = [bench_delay_table(
+        "two_hap", dt_shell, horizon_h, step_s,
+        n_queries=200 if smoke else 2000)]
+    r = doc["delay_table"][0]
+    print(f"delay_table[two_hap x {r['shell']}]: lookup {r['lookup_us']}us "
+          f"gather {r['gather_us']}us vs reference {r['reference_us']}us "
+          f"({r['speedup']:.0f}x)", flush=True)
+
+    doc["sweep"] = bench_sweep(sweep_scenarios, horizon_h, step_s,
+                               rounds=sweep_rounds)
+
+    if sim_wallclock:
+        from benchmarks.sim_wallclock import report
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        model_kind="mlp", num_samples=4000,
+                        eval_samples=500, horizon_h=72.0, time_step_s=30.0)
+        doc["sim_wallclock"] = report("geometry", cfg, rounds=rounds)
+    else:
+        doc["sim_wallclock"] = None
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scenarios (CI tier)")
+    ap.add_argument("--sim-wallclock", action="store_true",
+                    help="also run the paper-5x8 engine-vs-legacy "
+                         "rounds/sec comparison")
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="where to write BENCH_sim.json")
+    args = ap.parse_args()
+    doc = run(smoke=args.smoke, sim_wallclock=args.sim_wallclock,
+              rounds=args.rounds)
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,6 +65,10 @@ class FederatedData:
     images: np.ndarray
     labels: np.ndarray
     client_indices: list[np.ndarray]
+    _padded: np.ndarray | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _sizes: np.ndarray | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def num_clients(self) -> int:
@@ -73,6 +77,28 @@ class FederatedData:
     def client_sizes(self) -> np.ndarray:
         """n_k of Eq. 1 / m_k of Eq. 14, per satellite."""
         return np.array([len(ix) for ix in self.client_indices])
+
+    def padded_indices(self) -> tuple[np.ndarray, np.ndarray]:
+        """Rectangular index view for batched sampling.
+
+        Returns ``(padded, sizes)``: ``padded`` is ``(n_clients,
+        max_shard)`` int64 with row c holding client c's global sample
+        indices, tail padded with the row's first index (samplers must
+        bound their draws by ``sizes`` — the padding is a harmless
+        repeat for non-empty shards, and empty shards must be rejected
+        before sampling). Built once and cached; lets one fancy-index
+        gather sample mini-batch streams for every participating client
+        at once.
+        """
+        if self._padded is None:
+            sizes = self.client_sizes()
+            padded = np.empty((len(self.client_indices), int(sizes.max())),
+                              dtype=np.int64)
+            for c, ix in enumerate(self.client_indices):
+                padded[c, :len(ix)] = ix
+                padded[c, len(ix):] = ix[0] if len(ix) else 0
+            self._padded, self._sizes = padded, sizes
+        return self._padded, self._sizes
 
     def client_iterator(
         self, client: int, batch_size: int, seed: int = 0

@@ -4,22 +4,42 @@ This subpackage is the physical substrate of FedHAP: a Walker-delta LEO
 constellation (positions over time), ground/HAP stations (rotating with the
 Earth), elevation-angle visibility, and RF/FSO link budgets that convert
 model payload sizes into communication delays (paper Eq. 5-13, Table I).
+
+The geometry layer is batched end-to-end: constellations carry stacked
+``(S,)`` ephemeris arrays and propagate as one ``(S, T, 3)`` tensor
+(`ephemeris_positions_eci`), stations evaluate as ``(n_st, T, 3)``
+(`station_positions_eci` / `stations_eci`), and visibility grids are
+single broadcasted elevation tests (`visibility_mask`,
+`mask_from_positions`, `sat_sat_visibility_mask`). Per-pair scalar paths
+(`is_visible`, `visibility_mask_pairwise`) remain as equivalence
+references and benchmark baselines. Link-budget functions are
+vectorized over distance so delay tables over whole grids are one call.
 """
 from repro.orbits.constellation import (
     EARTH_RADIUS_M,
     MU_EARTH,
     Satellite,
     WalkerConstellation,
+    ephemeris_positions_eci,
     orbital_period_s,
     orbital_speed_ms,
+    station_positions_eci,
 )
 from repro.orbits.visibility import (
     Station,
+    effective_min_elevation_deg,
     elevation_angle_deg,
     is_visible,
+    iter_distance_chunks,
+    mask_from_positions,
     next_contact_table,
+    sat_sat_visibility_mask,
+    sat_sat_visible,
+    stations_eci,
     visibility_mask,
+    visibility_mask_pairwise,
     visibility_windows,
+    windows_from_mask,
 )
 from repro.orbits.links import (
     FSO_DEFAULTS,
@@ -36,9 +56,14 @@ from repro.orbits.links import (
 
 __all__ = [
     "EARTH_RADIUS_M", "MU_EARTH", "Satellite", "WalkerConstellation",
-    "orbital_period_s", "orbital_speed_ms",
-    "Station", "elevation_angle_deg", "is_visible", "next_contact_table",
-    "visibility_mask", "visibility_windows",
+    "ephemeris_positions_eci", "orbital_period_s", "orbital_speed_ms",
+    "station_positions_eci",
+    "Station", "effective_min_elevation_deg", "elevation_angle_deg",
+    "is_visible", "iter_distance_chunks", "mask_from_positions",
+    "next_contact_table",
+    "sat_sat_visibility_mask", "sat_sat_visible", "stations_eci",
+    "visibility_mask", "visibility_mask_pairwise", "visibility_windows",
+    "windows_from_mask",
     "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
     "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",
     "rf_snr", "shannon_rate_bps",

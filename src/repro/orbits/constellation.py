@@ -6,12 +6,21 @@ Earth (see `visibility.Station`). All units SI unless suffixed.
 
 The paper's setup (§IV-A): L=5 orbits x K=8 satellites, h=2000 km,
 inclination 80 deg, Walker-delta phasing.
+
+Ephemeris layout: besides the per-object :class:`Satellite` list (kept
+for scheduling code that reasons about individual spacecraft),
+:class:`WalkerConstellation` carries a *stacked ephemeris* — flat
+``(S,)`` float64 arrays ``sma_m`` (semi-major axis), ``inclination``,
+``raan``, ``phase`` in satellite-id order. ``positions_eci`` and
+``ephemeris_positions_eci`` propagate every satellite for every query
+time as one broadcasted ``(S, T, 3)`` evaluation with no per-satellite
+Python, which is what lets the visibility/delay grids scale to
+mega-constellations (100+ satellite shells).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
 
 import numpy as np
 
@@ -71,11 +80,56 @@ class Satellite:
         return np.stack([x, y, z], axis=-1)
 
 
+def ephemeris_positions_eci(
+    sma_m: np.ndarray,
+    inclination_rad: np.ndarray,
+    raan_rad: np.ndarray,
+    phase_rad: np.ndarray,
+    t_s: float | np.ndarray,
+) -> np.ndarray:
+    """Batched circular-orbit propagation; shape (S, ...t, 3).
+
+    All four ephemeris arrays are ``(S,)``; ``t_s`` may be scalar or any
+    shape ``(...t)``. One broadcasted evaluation computes every satellite
+    at every time — the array-native core behind
+    :meth:`WalkerConstellation.positions_eci` and the visibility/delay
+    grids. The arithmetic mirrors :meth:`Satellite.position_eci`
+    operation-for-operation so batched and per-object paths agree.
+    """
+    sma = np.asarray(sma_m, dtype=np.float64)[:, None]
+    inc = np.asarray(inclination_rad, dtype=np.float64)[:, None]
+    raan = np.asarray(raan_rad, dtype=np.float64)[:, None]
+    phase = np.asarray(phase_rad, dtype=np.float64)[:, None]
+    t = np.asarray(t_s, dtype=np.float64)
+    t_shape = t.shape                        # () for scalar queries
+    t = t.reshape(1, -1)
+
+    n = 2.0 * math.pi / (2.0 * math.pi * sma ** 1.5 / math.sqrt(MU_EARTH))
+    u = phase + n * t                       # argument of latitude (S, T)
+    x_o = sma * np.cos(u)
+    y_o = sma * np.sin(u)
+    ci, si = np.cos(inc), np.sin(inc)
+    co, so = np.cos(raan), np.sin(raan)
+    x = co * x_o - so * ci * y_o
+    y = so * x_o + co * ci * y_o
+    z = si * y_o
+    pos = np.stack([np.broadcast_to(x, u.shape),
+                    np.broadcast_to(y, u.shape),
+                    np.broadcast_to(z, u.shape)], axis=-1)
+    return pos.reshape(sma.shape[0], *t_shape, 3)
+
+
 class WalkerConstellation:
     """Walker-delta constellation: L equally spaced planes, K_l sats/plane.
 
     Walker notation i:T/P/F with phasing factor F: the along-track phase
     offset between adjacent planes is F * 360/T degrees.
+
+    Holds both per-object :class:`Satellite` records (satellite-id order)
+    and the equivalent stacked ephemeris arrays ``sma_m`` /
+    ``inclination`` / ``raan`` / ``phase``, each ``(S,)`` float64 — the
+    batched representation used by ``positions_eci`` and the grid
+    builders.
     """
 
     def __init__(
@@ -93,25 +147,33 @@ class WalkerConstellation:
         self.altitude_m = altitude_m
         self.inclination_rad = math.radians(inclination_deg)
         total = num_orbits * sats_per_orbit
-        self.satellites: list[Satellite] = []
-        for l in range(num_orbits):
-            raan = 2.0 * math.pi * l / num_orbits
-            for k in range(sats_per_orbit):
-                phase = (
-                    2.0 * math.pi * k / sats_per_orbit
-                    + 2.0 * math.pi * phasing_factor * l / total
-                )
-                self.satellites.append(
-                    Satellite(
-                        sat_id=l * sats_per_orbit + k,
-                        orbit=l,
-                        slot=k,
-                        altitude_m=altitude_m,
-                        inclination_rad=self.inclination_rad,
-                        raan_rad=raan,
-                        phase_rad=phase,
-                    )
-                )
+
+        # Stacked ephemeris (satellite-id order): one vectorized build.
+        orbit_idx = np.arange(total) // sats_per_orbit
+        slot_idx = np.arange(total) % sats_per_orbit
+        self.sma_m = np.full(total, EARTH_RADIUS_M + altitude_m)
+        self.inclination = np.full(total, self.inclination_rad)
+        self.raan = 2.0 * math.pi * orbit_idx / num_orbits
+        self.phase = (2.0 * math.pi * slot_idx / sats_per_orbit
+                      + 2.0 * math.pi * phasing_factor * orbit_idx / total)
+
+        self.satellites: list[Satellite] = [
+            Satellite(
+                sat_id=i,
+                orbit=int(orbit_idx[i]),
+                slot=int(slot_idx[i]),
+                altitude_m=altitude_m,
+                inclination_rad=self.inclination_rad,
+                raan_rad=float(self.raan[i]),
+                phase_rad=float(self.phase[i]),
+            )
+            for i in range(total)
+        ]
+        # Per-orbit membership table, built once: _orbit_table[l] holds the
+        # satellite ids of plane l in slot order (orbit_members/ring_neighbor
+        # used to rebuild an O(S) comprehension per call).
+        self._orbit_table = np.arange(total).reshape(
+            num_orbits, sats_per_orbit)
 
     def __len__(self) -> int:
         return len(self.satellites)
@@ -121,7 +183,7 @@ class WalkerConstellation:
         return orbital_period_s(self.altitude_m)
 
     def orbit_members(self, orbit: int) -> list[Satellite]:
-        return [s for s in self.satellites if s.orbit == orbit]
+        return [self.satellites[i] for i in self._orbit_table[orbit]]
 
     def ring_neighbor(self, sat: Satellite, direction: int = +1) -> Satellite:
         """Next-hop satellite on the same orbit's PTP ring (paper §III-A).
@@ -130,10 +192,19 @@ class WalkerConstellation:
         -1 = reverse.
         """
         k = (sat.slot + direction) % self.sats_per_orbit
-        return self.orbit_members(sat.orbit)[k]
+        return self.satellites[self._orbit_table[sat.orbit, k]]
 
     def positions_eci(self, t_s: float | np.ndarray) -> np.ndarray:
-        """Positions of every satellite; shape (n_sats, ..., 3)."""
+        """Positions of every satellite; shape (n_sats, ...t, 3).
+
+        One broadcasted ephemeris evaluation — no per-satellite Python.
+        """
+        return ephemeris_positions_eci(
+            self.sma_m, self.inclination, self.raan, self.phase, t_s)
+
+    def positions_eci_pairwise(self, t_s: float | np.ndarray) -> np.ndarray:
+        """Per-object reference path (one ``Satellite.position_eci`` call
+        per spacecraft); kept for equivalence tests and benchmarks."""
         return np.stack([s.position_eci(t_s) for s in self.satellites])
 
     def isl_distance_m(self, a: Satellite, b: Satellite, t_s: float) -> float:
@@ -161,3 +232,27 @@ def station_position_eci(
     return np.stack([np.broadcast_to(x, np.shape(lon)),
                      np.broadcast_to(y, np.shape(lon)),
                      np.broadcast_to(z, np.shape(lon))], axis=-1)
+
+
+def station_positions_eci(
+    lat_deg: np.ndarray,
+    lon_deg: np.ndarray,
+    altitude_m: np.ndarray,
+    t_s: float | np.ndarray,
+) -> np.ndarray:
+    """Batched :func:`station_position_eci`; shape (n_st, ...t, 3).
+
+    ``lat_deg`` / ``lon_deg`` / ``altitude_m`` are ``(n_st,)`` arrays; one
+    broadcasted evaluation rotates every station to every query time.
+    """
+    lat = np.radians(np.asarray(lat_deg, dtype=np.float64))[:, None]
+    lon0 = np.radians(np.asarray(lon_deg, dtype=np.float64))[:, None]
+    r = (EARTH_RADIUS_M
+         + np.asarray(altitude_m, dtype=np.float64))[:, None]
+    t = np.asarray(t_s, dtype=np.float64)
+    t_shape = t.shape
+    lon = lon0 + EARTH_ROTATION_RAD_S * t.reshape(1, -1)
+    x = r * np.cos(lat) * np.cos(lon)
+    y = r * np.cos(lat) * np.sin(lon)
+    z = (r * np.sin(lat)) * np.ones_like(lon)
+    return np.stack([x, y, z], axis=-1).reshape(lat.shape[0], *t_shape, 3)

@@ -145,39 +145,47 @@ def shannon_rate_bps(snr: float | np.ndarray, bandwidth_hz: float):
 
 
 def link_rate_bps(
-    distance_m: float,
+    distance_m: float | np.ndarray,
     kind: str = "rf",
     rf: RfLinkParams = RF_DEFAULTS,
     fso: FsoLinkParams = FSO_DEFAULTS,
     altitude_m: float = 20_000.0,
-) -> float:
+) -> float | np.ndarray:
     """Effective data rate for a link. Table I pins R = 16 Mb/s for the
     paper's experiments (both link types, for fairness); passing
-    fixed_rate_bps=None computes the Shannon rate from the SNR instead."""
+    fixed_rate_bps=None computes the Shannon rate from the SNR instead.
+
+    Vectorized over ``distance_m`` (scalar in -> float out, array in ->
+    array out) so delay *tables* over whole visibility grids are one
+    evaluation."""
+    scalar = np.ndim(distance_m) == 0
+    d = np.asarray(distance_m, dtype=np.float64)
     if kind == "rf":
-        if rf.fixed_rate_bps is not None:
-            return rf.fixed_rate_bps
-        return float(shannon_rate_bps(rf_snr(distance_m, rf), rf.bandwidth_hz))
-    if kind == "fso":
-        if fso.fixed_rate_bps is not None:
-            return fso.fixed_rate_bps
-        return float(
-            shannon_rate_bps(fso_snr(distance_m, altitude_m, fso), fso.bandwidth_hz)
-        )
-    raise ValueError(f"unknown link kind: {kind}")
+        rate = (np.full(d.shape, rf.fixed_rate_bps)
+                if rf.fixed_rate_bps is not None
+                else shannon_rate_bps(rf_snr(d, rf), rf.bandwidth_hz))
+    elif kind == "fso":
+        rate = (np.full(d.shape, fso.fixed_rate_bps)
+                if fso.fixed_rate_bps is not None
+                else shannon_rate_bps(fso_snr(d, altitude_m, fso),
+                                      fso.bandwidth_hz))
+    else:
+        raise ValueError(f"unknown link kind: {kind}")
+    return float(rate) if scalar else rate
 
 
 def link_delay_s(
     payload_bits: float,
-    distance_m: float,
+    distance_m: float | np.ndarray,
     kind: str = "rf",
     processing_delay_s: float = 0.05,
     rf: RfLinkParams = RF_DEFAULTS,
     fso: FsoLinkParams = FSO_DEFAULTS,
-) -> float:
+) -> float | np.ndarray:
     """Eq. 7: t_d = z|D|/R  +  d/c  +  t_a + t_b.
 
     transmission + propagation + (sender + receiver processing).
+    Vectorized over ``distance_m`` like :func:`link_rate_bps`.
     """
     rate = link_rate_bps(distance_m, kind, rf, fso)
     t_t = payload_bits / rate
@@ -187,11 +195,11 @@ def link_delay_s(
 
 def model_transfer_delay_s(
     num_params: int,
-    distance_m: float,
+    distance_m: float | np.ndarray,
     kind: str = "rf",
     bits_per_param: int = 32,
     processing_delay_s: float = 0.05,
-) -> float:
+) -> float | np.ndarray:
     """Delay to ship a model of `num_params` parameters over a link."""
     return link_delay_s(
         float(num_params) * bits_per_param, distance_m, kind,

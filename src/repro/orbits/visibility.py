@@ -9,12 +9,20 @@ local horizon is depressed by acos(R_E / (R_E + h_s)), so a HAP with the
 same alpha_min sees strictly more sky than a GS — we model this with the
 horizon-depression term, which is the physically correct statement of the
 paper's claim.
+
+Batched layout: ``visibility_mask`` evaluates all stations x all
+satellites x all times as one broadcasted elevation test over stacked
+``(n_st, T, 3)`` station and ``(S, T, 3)`` satellite position tensors
+(time-chunked to bound the broadcast intermediate), with no per-pair
+Python. The scalar per-pair path (``is_visible`` /
+``visibility_mask_pairwise``) is retained as the equivalence reference
+and benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -23,7 +31,15 @@ from repro.orbits.constellation import (
     Satellite,
     WalkerConstellation,
     station_position_eci,
+    station_positions_eci,
 )
+
+# Size of one (n_st, S, T_chunk) float64 block of the batched elevation
+# evaluation. Grids are processed in time chunks of this many bytes so
+# the elementwise intermediates stay cache-resident (streaming whole
+# mega-constellation grids through RAM is ~5x slower) and memory stays
+# bounded regardless of grid size.
+_CHUNK_BYTES = 1 << 21
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,12 +72,30 @@ ROLLA = (37.9514, -91.7713)
 DALLAS = (32.7767, -96.7970)
 
 
+def stations_eci(
+    stations: Sequence[Station], t_s: float | np.ndarray
+) -> np.ndarray:
+    """Stacked ECI positions of every station; shape (n_st, ...t, 3)."""
+    lat = np.array([s.lat_deg for s in stations])
+    lon = np.array([s.lon_deg for s in stations])
+    alt = np.array([s.altitude_m for s in stations])
+    return station_positions_eci(lat, lon, alt, t_s)
+
+
+def effective_min_elevation_deg(stations: Sequence[Station]) -> np.ndarray:
+    """Per-station alpha_min minus earned horizon depression; (n_st,)."""
+    return np.array([
+        s.min_elevation_deg - s.horizon_depression_deg for s in stations
+    ])
+
+
 def elevation_angle_deg(
     station_pos: np.ndarray, sat_pos: np.ndarray
 ) -> np.ndarray:
     """Elevation of the satellite above the station's local horizon plane.
 
-    elevation = 90 deg - angle(r_g, r_k - r_g).
+    elevation = 90 deg - angle(r_g, r_k - r_g). Fully broadcastable: any
+    leading dims on either position tensor.
     """
     rel = sat_pos - station_pos
     num = np.sum(station_pos * rel, axis=-1)
@@ -76,7 +110,9 @@ def is_visible(
     """Feasibility condition of paper §II-B (vectorized over time).
 
     The effective minimum elevation is alpha_min minus the horizon
-    depression earned by the station's altitude (0 for a GS).
+    depression earned by the station's altitude (0 for a GS). This is
+    the scalar per-pair reference; grid builds go through
+    :func:`visibility_mask`.
     """
     sp = station.position_eci(t_s)
     kp = sat.position_eci(t_s)
@@ -85,18 +121,122 @@ def is_visible(
     return elev >= eff_min
 
 
+def _iter_gram_chunks(station_pos: np.ndarray, sat_pos: np.ndarray):
+    """Yield cache-sized Gram blocks of the station x satellite geometry.
+
+    For each time chunk ``sl`` yields ``(sl, g, sp2, kp2)``: ``g`` the
+    ``(Tc, n_st, S)`` dot products r_g . r_k (one batched matmul),
+    ``sp2``/``kp2`` the matching ``(Tc, n_st)`` / ``(Tc, S)`` squared
+    norms. Chunks are sized by ``_CHUNK_BYTES`` so the elementwise
+    passes of every consumer (visibility masks, distance/delay tables)
+    stay cache-resident; no (n_st, S, T, 3) temporary ever exists.
+    """
+    n_st, T = station_pos.shape[0], station_pos.shape[1]
+    S = sat_pos.shape[0]
+    sp2 = np.einsum("ntc,ntc->tn", station_pos, station_pos)
+    kp2 = np.einsum("stc,stc->ts", sat_pos, sat_pos)
+    chunk = max(1, _CHUNK_BYTES // max(1, n_st * S * 8))
+    for i in range(0, T, chunk):
+        sl = slice(i, min(i + chunk, T))
+        g = station_pos[:, sl].transpose(1, 0, 2) @ \
+            sat_pos[:, sl].transpose(1, 2, 0)
+        yield sl, g, sp2[sl], kp2[sl]
+
+
+def iter_distance_chunks(station_pos: np.ndarray, sat_pos: np.ndarray):
+    """Yield ``(time_slice, (n_st, S, Tc) distances)`` over the grid.
+
+    |r_k - r_g| expanded from the shared Gram blocks — the chunked
+    pairwise-distance kernel behind the engine's SHL-delay tables.
+    """
+    for sl, g, sp2, kp2 in _iter_gram_chunks(station_pos, sat_pos):
+        rel2 = np.maximum(
+            kp2[:, None, :] - 2.0 * g + sp2[:, :, None], 0.0)
+        yield sl, np.sqrt(rel2).transpose(1, 2, 0)
+
+
+def mask_from_positions(
+    station_pos: np.ndarray,
+    sat_pos: np.ndarray,
+    eff_min_deg: np.ndarray,
+) -> np.ndarray:
+    """Batched §II-B feasibility from precomputed position tensors.
+
+    ``station_pos``: (n_st, T, 3); ``sat_pos``: (S, T, 3);
+    ``eff_min_deg``: (n_st,). Returns (n_st, S, T) bool.
+
+    The elevation test is evaluated in dot-product form:
+        elev >= eff  <=>  cos(angle(r_g, r_k - r_g)) >= cos(90deg - eff)
+    with r_g.(r_k - r_g) and |r_k - r_g|^2 expanded from the shared
+    Gram blocks (:func:`_iter_gram_chunks`) — no arccos and no
+    (n_st, S, T, 3) relative-position temporary.
+    """
+    n_st, T = station_pos.shape[0], station_pos.shape[1]
+    S = sat_pos.shape[0]
+    eff = np.asarray(eff_min_deg, dtype=np.float64)
+    thresh = np.cos(np.radians(90.0 - eff))[None, :, None]   # (1, n_st, 1)
+    out = np.empty((n_st, S, T), dtype=bool)
+    for sl, g, sp2, kp2 in _iter_gram_chunks(station_pos, sat_pos):
+        s2 = sp2[:, :, None]
+        num = g - s2                                # r_g . (r_k - r_g)
+        rel2 = np.maximum(kp2[:, None, :] - 2.0 * g + s2, 0.0)
+        den = np.sqrt(s2 * rel2)                    # |r_g| |r_k - r_g|
+        out[:, :, sl] = (num >= thresh * np.maximum(den, 1e-12)
+                         ).transpose(1, 2, 0)
+    return out
+
+
 def visibility_mask(
     stations: Sequence[Station],
     constellation: WalkerConstellation,
     t_s: float | np.ndarray,
 ) -> np.ndarray:
-    """Boolean mask [n_stations, n_sats, ...time] of who sees whom."""
+    """Boolean mask [n_stations, n_sats, ...time] of who sees whom.
+
+    One stacked-ephemeris propagation + one broadcasted elevation test —
+    bit-identical to :func:`visibility_mask_pairwise` (verified in
+    tests), O(stations·sats) Python eliminated.
+    """
+    t = np.asarray(t_s, dtype=np.float64)
+    sp = stations_eci(stations, t).reshape(len(stations), -1, 3)
+    kp = constellation.positions_eci(t).reshape(len(constellation), -1, 3)
+    m = mask_from_positions(sp, kp, effective_min_elevation_deg(stations))
+    return m.reshape((len(stations), len(constellation)) + t.shape)
+
+
+def visibility_mask_pairwise(
+    stations: Sequence[Station],
+    constellation: WalkerConstellation,
+    t_s: float | np.ndarray,
+) -> np.ndarray:
+    """Per-pair reference grid build (one ``is_visible`` per station x
+    satellite); kept for equivalence tests and ``bench_geometry``."""
     t = np.asarray(t_s, dtype=np.float64)
     out = np.zeros((len(stations), len(constellation)) + t.shape, dtype=bool)
     for i, st in enumerate(stations):
         for j, sat in enumerate(constellation.satellites):
             out[i, j] = is_visible(st, sat, t)
     return out
+
+
+def windows_from_mask(
+    vis: np.ndarray, ts: np.ndarray
+) -> list[tuple[float, float]]:
+    """Contiguous [rise, set] intervals of one ``(T,)`` visibility series.
+
+    Edge detection is one ``np.diff`` over the sampled series.
+    """
+    vis = np.asarray(vis, dtype=bool)
+    if not vis.any():
+        return []
+    edges = np.diff(vis.astype(np.int8))
+    rises = np.nonzero(edges == 1)[0] + 1
+    sets_ = np.nonzero(edges == -1)[0]
+    if vis[0]:
+        rises = np.concatenate([[0], rises])
+    if vis[-1]:
+        sets_ = np.concatenate([sets_, [len(vis) - 1]])
+    return [(float(ts[r]), float(ts[s])) for r, s in zip(rises, sets_)]
 
 
 def visibility_windows(
@@ -110,21 +250,23 @@ def visibility_windows(
 
     Sampled at `step_s` resolution (the paper simulates at comparable
     granularity; windows at 2000 km last many minutes, so 10 s is ample).
-    Edge detection is vectorized (one `np.diff` over the sampled series
-    instead of a Python scan).
+    Routed through the batched mask core — one stacked position
+    evaluation + :func:`windows_from_mask` — and returns exactly the
+    windows the per-pair sampling used to produce.
     """
     ts = np.arange(t_start_s, t_end_s + step_s, step_s)
-    vis = np.asarray(is_visible(station, sat, ts))
-    if not vis.any():
-        return []
-    edges = np.diff(vis.astype(np.int8))
-    rises = np.nonzero(edges == 1)[0] + 1
-    sets_ = np.nonzero(edges == -1)[0]
-    if vis[0]:
-        rises = np.concatenate([[0], rises])
-    if vis[-1]:
-        sets_ = np.concatenate([sets_, [len(vis) - 1]])
-    return [(float(ts[r]), float(ts[s])) for r, s in zip(rises, sets_)]
+    sp = station_positions_eci(
+        np.array([station.lat_deg]), np.array([station.lon_deg]),
+        np.array([station.altitude_m]), ts)
+    from repro.orbits.constellation import ephemeris_positions_eci
+    kp = ephemeris_positions_eci(
+        np.array([EARTH_RADIUS_M + sat.altitude_m]),
+        np.array([sat.inclination_rad]),
+        np.array([sat.raan_rad]), np.array([sat.phase_rad]), ts)
+    eff = np.array([station.min_elevation_deg
+                    - station.horizon_depression_deg])
+    vis = mask_from_positions(sp, kp, eff)[0, 0]
+    return windows_from_mask(vis, ts)
 
 
 def next_contact_table(vis: np.ndarray) -> np.ndarray:
@@ -153,10 +295,33 @@ def sat_sat_visible(
 
     Visibility is obstructed if the minimum distance from the Earth's center
     to the segment [a, b] drops below R_E + grazing altitude (paper Eq. 6's
-    l_{a,b} condition).
+    l_{a,b} condition). Fully broadcastable over leading dims.
     """
     d = b_pos - a_pos
     dd = np.sum(d * d, axis=-1)
     t = np.clip(-np.sum(a_pos * d, axis=-1) / np.maximum(dd, 1e-12), 0.0, 1.0)
     closest = a_pos + t[..., None] * d
     return np.linalg.norm(closest, axis=-1) >= EARTH_RADIUS_M + grazing_altitude_m
+
+
+def sat_sat_visibility_mask(
+    constellation: WalkerConstellation,
+    t_s: float | np.ndarray,
+    grazing_altitude_m: float = 80_000.0,
+) -> np.ndarray:
+    """All-pairs ISL line-of-sight grid; shape (S, S, ...time) bool.
+
+    One stacked propagation + a time-chunked (S, S, T_chunk) broadcast of
+    :func:`sat_sat_visible` — the ISL-gating analogue of
+    :func:`visibility_mask` for cross-plane routing strategies.
+    """
+    t = np.asarray(t_s, dtype=np.float64)
+    pos = constellation.positions_eci(t).reshape(len(constellation), -1, 3)
+    S, T = pos.shape[0], pos.shape[1]
+    out = np.empty((S, S, T), dtype=bool)
+    chunk = max(1, (1 << 25) // max(1, S * S * 3 * 8))
+    for i in range(0, T, chunk):
+        sl = slice(i, min(i + chunk, T))
+        out[:, :, sl] = sat_sat_visible(
+            pos[:, None, sl, :], pos[None, :, sl, :], grazing_altitude_m)
+    return out.reshape((S, S) + t.shape)

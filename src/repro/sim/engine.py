@@ -11,6 +11,18 @@ Architecture (see also ``repro.core.strategies``):
 - :class:`RoundEngine` owns the world (constellation, stations, dataset,
   trainer, visibility grid), the run loop, and the shared fast paths:
 
+  * **batched grid build** — station and satellite positions over the
+    whole timeline come from two stacked-ephemeris propagations
+    (``(n_st, T, 3)`` / ``(S, T, 3)``) and the visibility grid is one
+    broadcasted elevation test (`repro.orbits.mask_from_positions`) —
+    no per-(station, satellite) Python, so mega-constellation shells
+    (20x40+) and dense gateway grids build in array time;
+  * **SHL-delay tables** — station->satellite transfer delays are
+    precomputed on the same grid (float32, eager below
+    ``SimConfig.delay_table_max_bytes``, lazy per-column above it), so
+    the schedulers' per-segment :meth:`RoundEngine.shl_delay` queries
+    are O(1) lookups and :meth:`RoundEngine.shl_delays` answers whole
+    batches of segments as one gather;
   * **next-contact tables** — one vectorized pass over the visibility
     grid (`repro.orbits.next_contact_table`) turns per-round O(T) Python
     scans into O(1) lookups (:meth:`RoundEngine.first_orbit_contacts`);
@@ -31,7 +43,7 @@ Architecture (see also ``repro.core.strategies``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Union
+from typing import Any, Optional, Union
 
 import numpy as np
 
@@ -48,9 +60,12 @@ from repro.models import CNN, MLP
 from repro.orbits import (
     Station,
     WalkerConstellation,
+    effective_min_elevation_deg,
+    iter_distance_chunks,
+    mask_from_positions,
     model_transfer_delay_s,
     next_contact_table,
-    visibility_mask,
+    stations_eci,
 )
 from repro.orbits.visibility import DALLAS, ROLLA
 from repro.sim.strategies import RunState, Strategy, get_strategy
@@ -87,6 +102,9 @@ class SimConfig:
     # fedspace / fedsat knobs
     buffer_fraction: float = 0.5
     staleness_power: float = 0.5
+    # geometry engine: budget for the eager (n_st, n_sat, T) float32
+    # SHL-delay table; grids past it fall back to lazy per-column compute
+    delay_table_max_bytes: int = 512 * 2**20
 
 
 @dataclasses.dataclass
@@ -178,17 +196,29 @@ class RoundEngine:
         self.trainer = LocalTrainer(model, cfg.learning_rate, cfg.batch_size)
         self.model_bits = model.count_params() * 32
 
-        # Precompute visibility on the timeline grid.
+        # Precompute visibility + SHL-delay tables on the timeline grid:
+        # one stacked station/satellite propagation feeds both.
         n_steps = int(cfg.horizon_h * 3600 / cfg.time_step_s) + 2
         self.grid_t = np.arange(n_steps) * cfg.time_step_s
-        self.vis = visibility_mask(self.stations, self.constellation,
-                                   self.grid_t)  # (n_st, n_sat, T)
+        st_pos = stations_eci(self.stations, self.grid_t)   # (n_st, T, 3)
+        sat_pos = self.constellation.positions_eci(self.grid_t)  # (S, T, 3)
+        self.vis = mask_from_positions(
+            st_pos, sat_pos,
+            effective_min_elevation_deg(self.stations))  # (n_st, n_sat, T)
 
-        # Per-orbit any-station visibility series + next-contact table:
+        self._st_is_hap = np.array([s.is_hap for s in self.stations])
+        table_bytes = len(self.stations) * self.n_sats * n_steps * 4
+        if table_bytes <= cfg.delay_table_max_bytes:
+            self.shl_table = self._build_delay_table(st_pos, sat_pos)
+        else:
+            self.shl_table = None       # mega grids: lazy per-column cache
+        self._delay_cols: dict[int, np.ndarray] = {}
+
+        # Any-station visibility, per-orbit series + next-contact table:
         # contact queries are O(1) lookups instead of per-round scans.
         L, k = cfg.num_orbits, cfg.sats_per_orbit
-        any_vis = self.vis.any(axis=0)                      # (n_sat, T)
-        self.orbit_vis = any_vis.reshape(L, k, -1).any(axis=1)   # (L, T)
+        self.any_vis = self.vis.any(axis=0)                 # (n_sat, T)
+        self.orbit_vis = self.any_vis.reshape(L, k, -1).any(axis=1)  # (L, T)
         self.orbit_next = next_contact_table(self.orbit_vis)     # (L, T)
 
         # Static intra-orbit ISL geometry (circular orbits: constant).
@@ -208,7 +238,74 @@ class RoundEngine:
         """(n_stations, n_sats) bool."""
         return self.vis[:, :, self._tidx(t_s)]
 
+    # ------------------------------------------------ SHL-delay tables
+    def _delays_from_dist(self, dist: np.ndarray) -> np.ndarray:
+        """Station->satellite transfer delays from a (n_st, ...) distance
+        block; FSO rows for HAPs, RF rows for ground stations."""
+        out = np.empty_like(dist)
+        hap = self._st_is_hap
+        n_params = self.model_bits // 32
+        if hap.any():
+            out[hap] = model_transfer_delay_s(n_params, dist[hap], "fso")
+        if (~hap).any():
+            out[~hap] = model_transfer_delay_s(n_params, dist[~hap], "rf")
+        return out
+
+    def _build_delay_table(self, st_pos: np.ndarray,
+                           sat_pos: np.ndarray) -> np.ndarray:
+        """(n_st, n_sat, T) float32 SHL delays over the whole grid,
+        streamed through the shared cache-chunked distance kernel
+        (`repro.orbits.iter_distance_chunks`) — the same Gram-form
+        layout as the visibility grid build."""
+        out = np.empty((st_pos.shape[0], sat_pos.shape[0],
+                        st_pos.shape[1]), dtype=np.float32)
+        for sl, dist in iter_distance_chunks(st_pos, sat_pos):
+            out[:, :, sl] = self._delays_from_dist(dist)
+        return out
+
+    def _delay_column(self, tidx: int) -> np.ndarray:
+        """Lazy path for grids past ``delay_table_max_bytes``: compute
+        (and memoize) one (n_st, n_sat) delay column from the ephemeris."""
+        col = self._delay_cols.get(tidx)
+        if col is None:
+            t = float(self.grid_t[tidx])
+            sp = stations_eci(self.stations, t)               # (n_st, 3)
+            kp = self.constellation.positions_eci(t)          # (S, 3)
+            dist = np.linalg.norm(sp[:, None, :] - kp[None, :, :], axis=-1)
+            col = self._delays_from_dist(dist).astype(np.float32)
+            if len(self._delay_cols) >= 4096:
+                self._delay_cols.clear()
+            self._delay_cols[tidx] = col
+        return col
+
     def shl_delay(self, st_i: int, sat_i: int, t_s: float) -> float:
+        """Station->satellite model-transfer delay: an O(1) table lookup
+        at the nearest grid time (the schedulers' hottest query)."""
+        tidx = self._tidx(t_s)
+        if self.shl_table is not None:
+            return float(self.shl_table[st_i, sat_i, tidx])
+        return float(self._delay_column(tidx)[st_i, sat_i])
+
+    def shl_delays(self, st_idx, sat_idx, t_idx) -> np.ndarray:
+        """Batched SHL-delay gather for strategies that price many
+        segments at once: broadcastable int arrays of station, satellite,
+        and *grid-time* indices -> float delays of the broadcast shape."""
+        st_idx = np.asarray(st_idx)
+        sat_idx = np.asarray(sat_idx)
+        t_idx = np.asarray(t_idx)
+        if self.shl_table is not None:
+            return self.shl_table[st_idx, sat_idx, t_idx].astype(np.float64)
+        st_idx, sat_idx, t_idx = np.broadcast_arrays(st_idx, sat_idx, t_idx)
+        out = np.empty(st_idx.shape, dtype=np.float64)
+        for tcol in np.unique(t_idx):
+            m = t_idx == tcol
+            out[m] = self._delay_column(int(tcol))[st_idx[m], sat_idx[m]]
+        return out
+
+    def shl_delay_reference(self, st_i: int, sat_i: int,
+                            t_s: float) -> float:
+        """Per-pair reference (re-propagates both bodies at the exact
+        query time); kept for equivalence tests and bench_geometry."""
         st = self.stations[st_i]
         sat = self.constellation.satellites[sat_i]
         d = float(np.linalg.norm(
@@ -259,15 +356,6 @@ class RoundEngine:
         stacked, _ = self.trainer.train_clients(
             stacked, self.fd, list(range(self.n_sats)),
             self.cfg.local_steps, self.rng)
-        return stacked
-
-    def train_orbit(self, params: Any, l: int):
-        """Local-SGD burst on one orbit's satellites from a shared base."""
-        sl = self.orbit_slice(l)
-        clients = list(range(sl.start, sl.stop))
-        stacked = self.trainer.stack([params] * len(clients))
-        stacked, _ = self.trainer.train_clients(
-            stacked, self.fd, clients, self.cfg.local_steps, self.rng)
         return stacked
 
     def combine(self, stacked: Any, weights: Any):

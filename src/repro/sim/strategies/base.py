@@ -1,8 +1,9 @@
 """Strategy registry and base class for the timeline simulator.
 
 A *strategy* supplies only the scheduling + weighting rules of one
-FL-Satcom method; the shared round loop, the physical world (visibility
-grids, next-contact tables, link delays), local training, and einsum
+FL-Satcom method; the shared round loop, the physical world (batched
+visibility grids, next-contact tables, precomputed SHL-delay tables with
+the ``shl_delay``/``shl_delays`` lookup API), local training, and einsum
 aggregation all live in :class:`repro.sim.engine.RoundEngine`.
 
 Registering a strategy:

@@ -44,9 +44,10 @@ class FedHap(Strategy):
         L, k = cfg.num_orbits, cfg.sats_per_orbit
 
         # (L, n_st, k) station visibility of each orbit at its own time.
-        tidx = [eng._tidx(float(orbit_t[l])) for l in range(L)]
-        vis_rows = np.stack([
-            eng.vis[:, eng.orbit_slice(l), tidx[l]] for l in range(L)])
+        tidx = np.array([eng._tidx(float(orbit_t[l])) for l in range(L)])
+        rows = eng.vis[:, :, tidx]                # (n_st, n_sat, L)
+        rows = rows.reshape(rows.shape[0], L, k, L)
+        vis_rows = rows[:, np.arange(L), :, np.arange(L)]    # (L, n_st, k)
         any_vis = vis_rows.any(axis=1)                       # (L, k)
         sizes = eng.sizes.reshape(L, k)
 
@@ -58,19 +59,19 @@ class FedHap(Strategy):
         # Latency: each segment hops its run over the ISL ring, then
         # uploads through the first station that sees its terminal
         # satellite (Eq. 15 dedup: IDs filter duplicates across HAPs).
+        # Every (orbit, segment-end) upload is priced by ONE batched
+        # delay-table gather instead of per-segment shl_delay calls.
         train_t = eng.train_time()
         isl = eng.isl_delay()
-        round_end = t
-        for l in range(L):
-            tl = float(orbit_t[l])
-            owner = np.where(vis_rows[l].any(axis=0),
-                             vis_rows[l].argmax(axis=0), 0)
-            counts = np.bincount(seg_end[l], minlength=k)
-            for end in np.unique(seg_end[l]):
-                lat = (train_t + int(counts[end]) * isl
-                       + eng.shl_delay(int(owner[end]),
-                                       l * k + int(end), tl))
-                round_end = max(round_end, tl + lat)
+        owner = np.where(vis_rows.any(axis=1),
+                         vis_rows.argmax(axis=1), 0)         # (L, k)
+        counts = np.zeros((L, k), dtype=np.int64)            # members/end
+        np.add.at(counts, (np.arange(L)[:, None], seg_end), 1)
+        sat_ids = np.arange(L)[:, None] * k + np.arange(k)[None, :]
+        shl = eng.shl_delays(owner, sat_ids, tidx[:, None])  # (L, k)
+        lat = train_t + counts * isl + shl
+        ends = counts > 0                        # slots that end a segment
+        round_end = max(t, float((orbit_t[:, None] + lat)[ends].max()))
         return RoundPlan(orbit_t, mu, round_end)
 
     def step(self, eng: Any, s: RunState) -> bool:

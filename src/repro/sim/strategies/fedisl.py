@@ -27,17 +27,21 @@ class FedIsl(Strategy):
             return False
         stacked = eng.train_all(s.params)
         # Round latency: train + relay K models halfway around the ring
-        # + K full-model uploads through the gateway's single SGL.
+        # + K full-model uploads through the gateway's single SGL. All
+        # orbits' gateway picks and upload delays are one batched gather.
         isl = eng.isl_delay()
-        lat = 0.0
-        for l in range(cfg.num_orbits):
-            sl = eng.orbit_slice(l)
-            tl = float(orbit_t[l])
-            vis_l = eng.vis_at(tl).any(axis=0)
-            gw = int(np.nonzero(vis_l[sl])[0][0]) + sl.start
-            up = eng.shl_delay(0, gw, tl)
-            lat = max(lat, (tl - s.t) + eng.train_time()
-                      + (k // 2) * isl + k * up)
+        L = cfg.num_orbits
+        tidx = np.array([eng._tidx(float(orbit_t[l])) for l in range(L)])
+        any_vis = eng.any_vis[:, tidx]             # (n_sat, L)
+        blocks = any_vis.reshape(L, k, L)[np.arange(L), :, np.arange(L)]
+        if not blocks.any(axis=1).all():
+            raise RuntimeError(
+                "first_orbit_contacts returned a tick with no visible "
+                f"member for orbits {np.nonzero(~blocks.any(axis=1))[0]}")
+        gw = blocks.argmax(axis=1) + np.arange(L) * k   # first visible
+        up = eng.shl_delays(np.zeros(L, dtype=np.int64), gw, tidx)
+        lat = float(np.max((orbit_t - s.t) + eng.train_time()
+                           + (k // 2) * isl + k * up))
         # FedAvg aggregate of ALL satellites (FedISL is lossless).
         s.params = eng.combine(stacked, eng.sizes / eng.sizes.sum())
         s.t += lat

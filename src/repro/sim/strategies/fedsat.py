@@ -1,10 +1,14 @@
 """FedSat (Razmi et al., async, ideal NP GS): per-orbit periodic visits;
-the PS folds each orbit's fresh average in as it arrives."""
+the PS folds each orbit's fresh average in as it arrives.
+
+All orbits visited in one tick train as a single vmapped dispatch (one
+batched mini-batch gather across every participating satellite); the
+per-orbit async folds stay sequential, as the method requires."""
 from __future__ import annotations
 
 from typing import Any
 
-import numpy as np
+import jax
 
 from repro.core.treeops import tree_add, tree_scale
 from repro.sim.strategies.base import RunState, Strategy, register_strategy
@@ -25,11 +29,20 @@ class FedSat(Strategy):
         if not visited:
             s.t += cfg.time_step_s
             return True
-        for l in visited:
+        # ONE training burst for every satellite of every visited orbit,
+        # each replica starting from its orbit's last-known global.
+        clients = [c for l in visited
+                   for c in range(l * k, (l + 1) * k)]
+        stacked = eng.trainer.stack(
+            [base[l] for l in visited for _ in range(k)])
+        stacked, _ = eng.trainer.train_clients(
+            stacked, eng.fd, clients, cfg.local_steps, eng.rng)
+        for i, l in enumerate(visited):
             sl = eng.orbit_slice(l)
-            stacked = eng.train_orbit(base[l], l)
+            orbit_rows = jax.tree.map(
+                lambda x: x[i * k:(i + 1) * k], stacked)
             orbit_model = eng.combine(
-                stacked, eng.sizes[sl] / eng.sizes[sl].sum())
+                orbit_rows, eng.sizes[sl] / eng.sizes[sl].sum())
             # async fold: global <- (1-rho) global + rho orbit_model
             rho = eng.sizes[sl].sum() / eng.sizes.sum()
             s.params = tree_add(tree_scale(s.params, 1 - rho),

@@ -27,14 +27,22 @@ class FedSpace(Strategy):
         vis = eng.vis_at(s.t).any(axis=0)
         newly = vis & ~sc["last_seen"]      # rising edge: a new pass
         sc["last_seen"] = vis
-        for sat in np.nonzero(newly)[0]:
-            sat = int(sat)
-            new_p, _ = eng.trainer.train_client(
-                sc["sat_base"][sat], eng.fd, sat, cfg.local_steps, eng.rng)
-            delta = tree_sub(new_p, sc["sat_base"][sat])
-            sc["buffer"].append((sat, delta, int(sc["sat_base_tag"][sat])))
-            sc["sat_base"][sat] = s.params
-            sc["sat_base_tag"][sat] = sc["tag"]
+        new_sats = np.nonzero(newly)[0]
+        if len(new_sats):
+            # every fresh pass in this tick trains in ONE vmapped burst
+            stacked = eng.trainer.stack(
+                [sc["sat_base"][int(x)] for x in new_sats])
+            trained, _ = eng.trainer.train_clients(
+                stacked, eng.fd, new_sats.tolist(), cfg.local_steps,
+                eng.rng)
+            for j, sat in enumerate(new_sats):
+                sat = int(sat)
+                new_p = eng.trainer.unstack(trained, j)
+                delta = tree_sub(new_p, sc["sat_base"][sat])
+                sc["buffer"].append(
+                    (sat, delta, int(sc["sat_base_tag"][sat])))
+                sc["sat_base"][sat] = s.params
+                sc["sat_base_tag"][sat] = sc["tag"]
         if len(sc["buffer"]) >= max(1, int(cfg.buffer_fraction
                                            * eng.n_sats)):
             total = eng.sizes.sum()

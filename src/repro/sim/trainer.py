@@ -2,7 +2,10 @@
 
 Satellites all train the same small model (the paper's CNN or MLP), so a
 round's local training is vmapped across participating satellites: one
-jitted dispatch trains every replica on its own mini-batch stream.
+jitted dispatch trains every replica on its own mini-batch stream, and
+the mini-batch streams themselves come from one vectorized index gather
+across all participating clients (``sample_client_batches``) rather
+than a per-client sampling loop.
 """
 from __future__ import annotations
 
@@ -45,37 +48,62 @@ class LocalTrainer:
         return self.model.init(jax.random.key(seed))
 
     # ------------------------------------------------------------------
-    def _sample_steps(self, fd: FederatedData, client: int, n_steps: int,
-                      rng: np.random.Generator):
-        idx = fd.client_indices[client]
+    def sample_client_batches(self, fd: FederatedData,
+                              clients: Sequence[int], n_steps: int,
+                              rng: np.random.Generator):
+        """Mini-batch streams for MANY clients as ONE index gather.
+
+        Keeps the per-client reference semantics — sample WITHOUT
+        replacement when the shard covers the burst, with replacement
+        when it doesn't — but draws every participating client at once:
+        shards >= ``n_steps*bs`` take the ``need`` smallest of per-row
+        uniform sort keys (a batched distinct-uniform draw in random
+        order), smaller shards take floor(uniform * size) indices.
+        Local indices map to global ones through the cached padded
+        table and images/labels are gathered in a single fancy-index
+        op. Returns ``(C, n_steps, bs, ...)`` arrays. The old path did
+        one ``rng.choice`` + ``np.stack`` round-trip per client.
+        """
+        clients = np.asarray(clients, dtype=np.int64)
+        padded, sizes = fd.padded_indices()
         need = n_steps * self.batch_size
-        # sample with replacement when the shard is small
-        sel = rng.choice(idx, size=need, replace=len(idx) < need)
-        x = fd.images[sel].reshape(n_steps, self.batch_size,
+        szs = sizes[clients]
+        if (szs == 0).any():
+            raise ValueError(
+                f"clients {clients[szs == 0].tolist()} have empty shards")
+        local = np.empty((len(clients), need), dtype=np.int64)
+        small = szs < need
+        if small.any():
+            r = rng.random((int(small.sum()), need))
+            bound = szs[small][:, None]
+            local[small] = np.minimum((r * bound).astype(np.int64),
+                                      bound - 1)
+        if (~small).any():
+            keys = rng.random((int((~small).sum()), padded.shape[1]))
+            valid = np.arange(padded.shape[1])[None, :] < szs[~small][:, None]
+            local[~small] = np.argsort(
+                np.where(valid, keys, np.inf), axis=1)[:, :need]
+        sel = padded[clients[:, None], local]          # (C, need) global
+        x = fd.images[sel].reshape(len(clients), n_steps, self.batch_size,
                                    *fd.images.shape[1:])
-        y = fd.labels[sel].reshape(n_steps, self.batch_size)
+        y = fd.labels[sel].reshape(len(clients), n_steps, self.batch_size)
         return x, y
 
     def train_client(self, params, fd: FederatedData, client: int,
                      n_steps: int, rng: np.random.Generator):
         """Train ONE satellite's replica for n_steps mini-batches."""
-        x, y = self._sample_steps(fd, client, n_steps, rng)
-        new_params, losses = self._train_one(params, jnp.asarray(x),
-                                             jnp.asarray(y))
+        x, y = self.sample_client_batches(fd, [client], n_steps, rng)
+        new_params, losses = self._train_one(params, jnp.asarray(x[0]),
+                                             jnp.asarray(y[0]))
         return new_params, float(losses[-1])
 
     def train_clients(self, stacked_params, fd: FederatedData,
                       clients: Sequence[int], n_steps: int,
                       rng: np.random.Generator):
         """Train MANY satellites at once (stacked leading dim)."""
-        xs, ys = [], []
-        for c in clients:
-            x, y = self._sample_steps(fd, c, n_steps, rng)
-            xs.append(x)
-            ys.append(y)
+        x, y = self.sample_client_batches(fd, clients, n_steps, rng)
         new_params, losses = self._train_many(
-            stacked_params, jnp.asarray(np.stack(xs)),
-            jnp.asarray(np.stack(ys)))
+            stacked_params, jnp.asarray(x), jnp.asarray(y))
         return new_params, np.asarray(losses[:, -1])
 
     def evaluate(self, params, images: np.ndarray, labels: np.ndarray,

@@ -7,7 +7,7 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
 
-from benchmarks import bench_fig3, render_experiments
+from benchmarks import bench_fig3, bench_geometry, render_experiments
 from benchmarks.bench_roofline import load, render_markdown
 from repro.core.strategies import STRATEGIES, TABLE2_SETUPS
 
@@ -39,6 +39,30 @@ class TestSetups:
     def test_strategies_registry(self):
         assert set(STRATEGIES) == {"fedhap", "fedisl", "fedisl_ideal",
                                    "fedsat", "fedspace"}
+
+
+class TestGeometryBench:
+    def test_grid_build_row_well_formed(self):
+        row = bench_geometry.bench_grid_build(
+            "two_hap", (2, 3), horizon_h=1.0, step_s=120.0)
+        assert row["n_stations"] == 2 and row["n_sats"] == 6
+        assert row["batched_s"] > 0 and row["pairwise_s"] > 0
+        assert row["speedup"] > 0   # wall times jitter; shape-check only
+
+    def test_delay_table_row_well_formed(self):
+        row = bench_geometry.bench_delay_table(
+            "one_hap", (2, 3), horizon_h=1.0, step_s=120.0, n_queries=20)
+        assert row["eager_table"]
+        assert row["lookup_us"] > 0 and row["reference_us"] > 0
+
+    @pytest.mark.slow
+    def test_smoke_tier_writes_full_schema(self, tmp_path):
+        doc = bench_geometry.run(smoke=True)
+        for key in ("schema", "grid_build", "delay_table", "sweep",
+                    "sim_wallclock"):
+            assert key in doc
+        assert all(r["speedup"] > 0 for r in doc["grid_build"])
+        assert all(r["rounds_per_sec"] > 0 for r in doc["sweep"])
 
 
 class TestRendering:

@@ -1,0 +1,282 @@
+"""Equivalence tests for the batched geometry engine.
+
+The batched paths (stacked ephemeris, broadcasted visibility grids,
+SHL-delay tables, one-gather mini-batch sampling) must reproduce the
+per-pair scalar reference: masks bit-identical, delays allclose (the
+table stores float32), sampling gathers bit-identical to the per-client
+loop over the same uniform draws.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.orbits import (
+    EARTH_RADIUS_M,
+    Satellite,
+    Station,
+    WalkerConstellation,
+    ephemeris_positions_eci,
+    sat_sat_visibility_mask,
+    sat_sat_visible,
+    station_positions_eci,
+    visibility_mask,
+    visibility_mask_pairwise,
+    visibility_windows,
+    windows_from_mask,
+)
+from repro.orbits.constellation import station_position_eci
+from repro.orbits.visibility import ROLLA, is_visible
+from repro.sim import SatcomSimulator, SimConfig
+
+QUICK = dict(num_samples=3000, eval_samples=600, local_steps=6,
+             model_kind="mlp", horizon_h=24.0, time_step_s=60.0)
+
+
+def _paper_world():
+    con = WalkerConstellation(5, 8, 2000e3, 80.0)
+    stations = [
+        Station("hap-rolla", *ROLLA, altitude_m=20e3),
+        Station("gs-rolla", *ROLLA, altitude_m=0.0),
+        Station("gs-np", 89.9, 0.0, altitude_m=0.0),
+    ]
+    ts = np.arange(0, 24 * 3600, 60.0)
+    return con, stations, ts
+
+
+class TestBatchedPositions:
+    def test_constellation_positions_match_per_object(self):
+        con, _, ts = _paper_world()
+        np.testing.assert_array_equal(
+            con.positions_eci(ts), con.positions_eci_pairwise(ts))
+
+    def test_station_positions_match_per_object(self):
+        _, stations, ts = _paper_world()
+        batched = station_positions_eci(
+            np.array([s.lat_deg for s in stations]),
+            np.array([s.lon_deg for s in stations]),
+            np.array([s.altitude_m for s in stations]), ts)
+        for i, s in enumerate(stations):
+            np.testing.assert_allclose(
+                batched[i],
+                station_position_eci(s.lat_deg, s.lon_deg, s.altitude_m, ts),
+                rtol=1e-12, atol=1e-6)
+
+    def test_scalar_time_shape(self):
+        con, _, _ = _paper_world()
+        assert con.positions_eci(0.0).shape == (40, 3)
+        assert con.positions_eci(np.arange(5.0)).shape == (40, 5, 3)
+
+    @given(
+        L=st.integers(min_value=1, max_value=7),
+        k=st.integers(min_value=1, max_value=9),
+        h=st.floats(min_value=300e3, max_value=3000e3),
+        inc=st.floats(min_value=10.0, max_value=170.0),
+        f=st.integers(min_value=0, max_value=4),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_positions_norm_is_orbit_radius(self, L, k, h, inc, f):
+        """Property: every batched position sits at R_E + h exactly."""
+        con = WalkerConstellation(L, k, h, inc, phasing_factor=f)
+        ts = np.linspace(0.0, con.period_s, 17)
+        r = np.linalg.norm(con.positions_eci(ts), axis=-1)
+        np.testing.assert_allclose(r, EARTH_RADIUS_M + h, rtol=1e-9)
+
+    def test_ephemeris_matches_satellite_objects(self):
+        con, _, _ = _paper_world()
+        ts = np.array([0.0, 321.0, 9999.0])
+        pos = ephemeris_positions_eci(
+            con.sma_m, con.inclination, con.raan, con.phase, ts)
+        for sat in (con.satellites[0], con.satellites[17],
+                    con.satellites[39]):
+            np.testing.assert_allclose(
+                pos[sat.sat_id], sat.position_eci(ts), rtol=1e-12, atol=1e-6)
+
+
+class TestOrbitTable:
+    def test_orbit_members_precomputed(self):
+        con = WalkerConstellation(4, 6)
+        for l in range(4):
+            m = con.orbit_members(l)
+            assert [s.sat_id for s in m] == list(range(l * 6, (l + 1) * 6))
+
+    def test_ring_neighbor_uses_table(self):
+        con = WalkerConstellation(3, 4)
+        s = con.orbit_members(2)[3]
+        assert con.ring_neighbor(s, +1).sat_id == 2 * 4 + 0
+        assert con.ring_neighbor(s, -1).sat_id == 2 * 4 + 2
+
+
+class TestBatchedMask:
+    def test_mask_bit_identical_paper_setup(self):
+        con, stations, ts = _paper_world()
+        batched = visibility_mask(stations, con, ts)
+        pairwise = visibility_mask_pairwise(stations, con, ts)
+        assert batched.dtype == pairwise.dtype == np.bool_
+        np.testing.assert_array_equal(batched, pairwise)
+        assert batched.any() and not batched.all()
+
+    def test_mask_scalar_time(self):
+        con, stations, _ = _paper_world()
+        b = visibility_mask(stations, con, 1234.5)
+        p = visibility_mask_pairwise(stations, con, 1234.5)
+        assert b.shape == (3, 40)
+        np.testing.assert_array_equal(b, p)
+
+    def test_windows_identical_to_per_pair_sampling(self):
+        """visibility_windows (batched core) == edge-detect over the
+        per-pair is_visible series, window for window."""
+        con, _, _ = _paper_world()
+        st_ = Station("hap", *ROLLA, altitude_m=20e3)
+        for sat in (con.satellites[0], con.satellites[21]):
+            ts = np.arange(0.0, 86400.0 + 30.0, 30.0)
+            ref = windows_from_mask(np.asarray(is_visible(st_, sat, ts)), ts)
+            got = visibility_windows(st_, sat, 0.0, 86400.0, 30.0)
+            assert got == ref
+            assert len(got) >= 1
+
+    def test_sat_sat_mask_matches_pairs(self):
+        con = WalkerConstellation(3, 4)
+        ts = np.arange(0, 3600.0, 600.0)
+        grid = sat_sat_visibility_mask(con, ts)
+        pos = con.positions_eci(ts)
+        for a in range(len(con)):
+            for b in range(len(con)):
+                np.testing.assert_array_equal(
+                    grid[a, b], sat_sat_visible(pos[a], pos[b]))
+
+
+@pytest.mark.slow
+class TestBatchedMaskMega:
+    def test_mask_bit_identical_mega_shell(self):
+        """20x40 Walker shell x gateway grid: still bit-identical."""
+        from repro.sim.engine import _make_stations
+        con = WalkerConstellation(20, 40)
+        stations = _make_stations("grid:3x6")
+        ts = np.arange(0, 6 * 3600, 60.0)
+        np.testing.assert_array_equal(
+            visibility_mask(stations, con, ts),
+            visibility_mask_pairwise(stations, con, ts))
+
+
+class TestDelayTables:
+    @pytest.fixture(scope="class")
+    def eng(self):
+        return SatcomSimulator(SimConfig(stations="two_hap", max_rounds=1,
+                                         **QUICK))
+
+    def test_table_allclose_to_reference(self, eng):
+        assert eng.shl_table is not None
+        rng = np.random.default_rng(1)
+        for _ in range(64):
+            st_i = int(rng.integers(len(eng.stations)))
+            sat_i = int(rng.integers(eng.n_sats))
+            tidx = int(rng.integers(len(eng.grid_t)))
+            t = float(eng.grid_t[tidx])
+            assert eng.shl_delay(st_i, sat_i, t) == pytest.approx(
+                eng.shl_delay_reference(st_i, sat_i, t), rel=1e-5)
+
+    def test_batched_gather_matches_scalar_lookups(self, eng):
+        rng = np.random.default_rng(2)
+        st_i = rng.integers(0, len(eng.stations), 50)
+        sat_i = rng.integers(0, eng.n_sats, 50)
+        t_i = rng.integers(0, len(eng.grid_t), 50)
+        got = eng.shl_delays(st_i, sat_i, t_i)
+        want = [eng.shl_delay(int(a), int(b), float(eng.grid_t[c]))
+                for a, b, c in zip(st_i, sat_i, t_i)]
+        np.testing.assert_allclose(got, want, rtol=0)
+
+    def test_gather_broadcasts(self, eng):
+        got = eng.shl_delays(np.array([[0], [1]]), np.arange(4)[None, :], 7)
+        assert got.shape == (2, 4)
+
+    def test_lazy_columns_match_eager_table(self):
+        cfg = SimConfig(stations="two_hap", max_rounds=1, **QUICK)
+        eager = SatcomSimulator(cfg)
+        lazy = SatcomSimulator(
+            dataclasses.replace(cfg, delay_table_max_bytes=0))
+        assert lazy.shl_table is None
+        rng = np.random.default_rng(3)
+        st_i = rng.integers(0, 2, 40)
+        sat_i = rng.integers(0, eager.n_sats, 40)
+        t_i = rng.integers(0, len(eager.grid_t), 40)
+        np.testing.assert_allclose(
+            lazy.shl_delays(st_i, sat_i, t_i),
+            eager.shl_delays(st_i, sat_i, t_i), rtol=1e-6)
+
+    def test_delay_kind_split(self, eng):
+        """HAP rows price FSO, ground rows RF — same as the reference."""
+        gs_eng = SatcomSimulator(SimConfig(stations="gs", max_rounds=1,
+                                           **QUICK))
+        t = float(gs_eng.grid_t[10])
+        assert gs_eng.shl_delay(0, 0, t) == pytest.approx(
+            gs_eng.shl_delay_reference(0, 0, t), rel=1e-5)
+
+
+class TestBatchedSampling:
+    def test_gather_bit_identical_to_per_client_loop(self):
+        eng = SatcomSimulator(SimConfig(stations="one_hap", max_rounds=1,
+                                        **QUICK))
+        clients = [0, 3, 17, 39]
+        n_steps, bs = 5, eng.trainer.batch_size
+        x, y = eng.trainer.sample_client_batches(
+            eng.fd, clients, n_steps, np.random.default_rng(7))
+        # Per-client reference over the SAME uniform draws.
+        r = np.random.default_rng(7).random((len(clients), n_steps * bs))
+        for j, c in enumerate(clients):
+            idx = eng.fd.client_indices[c]
+            local = np.minimum((r[j] * len(idx)).astype(np.int64),
+                               len(idx) - 1)
+            sel = idx[local]
+            np.testing.assert_array_equal(
+                x[j], eng.fd.images[sel].reshape(n_steps, bs,
+                                                 *eng.fd.images.shape[1:]))
+            np.testing.assert_array_equal(
+                y[j], eng.fd.labels[sel].reshape(n_steps, bs))
+
+    def test_samples_stay_inside_client_shard(self):
+        eng = SatcomSimulator(SimConfig(stations="one_hap", max_rounds=1,
+                                        **QUICK))
+        clients = list(range(eng.n_sats))
+        x, y = eng.trainer.sample_client_batches(
+            eng.fd, clients, 3, np.random.default_rng(0))
+        for j, c in enumerate(clients):
+            own = eng.fd.labels[eng.fd.client_indices[c]]
+            assert set(np.unique(y[j])) <= set(np.unique(own))
+
+    def test_large_shards_sample_without_replacement(self):
+        """Shards that cover the burst keep the reference rng.choice
+        semantics: every drawn sample is distinct within the burst."""
+        eng = SatcomSimulator(SimConfig(stations="one_hap", max_rounds=1,
+                                        **QUICK))
+        clients = [0, 11]
+        bs = eng.trainer.batch_size
+        # shard ~60 samples, need = 1*32 = 32 < shard -> no-replacement
+        x, y = eng.trainer.sample_client_batches(
+            eng.fd, clients, 1, np.random.default_rng(9))
+        for j, c in enumerate(clients):
+            flat = x[j].reshape(bs, -1)
+            assert len(np.unique(flat, axis=0)) == bs
+            own = eng.fd.images[eng.fd.client_indices[c]].reshape(
+                len(eng.fd.client_indices[c]), -1)
+            # each drawn row really comes from this client's shard
+            assert all((own == row).all(axis=1).any() for row in flat)
+
+    def test_empty_shard_raises(self):
+        eng = SatcomSimulator(SimConfig(stations="one_hap", max_rounds=1,
+                                        **QUICK))
+        eng.fd.client_indices[2] = np.array([], dtype=np.int64)
+        eng.fd._padded = eng.fd._sizes = None     # invalidate cache
+        with pytest.raises(ValueError, match="empty shards"):
+            eng.trainer.sample_client_batches(
+                eng.fd, [1, 2], 2, np.random.default_rng(0))
+
+    def test_padded_indices_cached_and_consistent(self):
+        eng = SatcomSimulator(SimConfig(stations="one_hap", max_rounds=1,
+                                        **QUICK))
+        padded, sizes = eng.fd.padded_indices()
+        assert padded is eng.fd.padded_indices()[0]   # built once
+        for c, ix in enumerate(eng.fd.client_indices):
+            np.testing.assert_array_equal(padded[c, :sizes[c]], ix)
