@@ -1,7 +1,8 @@
 """Geometry-engine benchmark: batched grids vs per-pair Python, delay
-tables vs re-propagation, and a mega-constellation scenario sweep.
+tables vs re-propagation, routing tables, and a mega-constellation
+scenario sweep.
 
-Three sections, all recorded to ``BENCH_sim.json`` (schema documented in
+Four sections, all recorded to ``BENCH_sim.json`` (schema documented in
 ``benchmarks/README.md``) so the perf trajectory is tracked across PRs:
 
 - **grid_build** — wall time of the batched ``visibility_mask`` (one
@@ -11,6 +12,11 @@ Three sections, all recorded to ``BENCH_sim.json`` (schema documented in
 - **delay_table** — eager SHL-delay-table build time plus lookup
   latency (``RoundEngine.shl_delay`` / batched ``shl_delays``) vs the
   per-call re-propagating reference.
+- **routing** — the ISL routing subsystem: contact-graph (LoS grid +
+  edge-next table) build times up to a 20x40 shell, batched
+  earliest-arrival search vs the per-edge Python reference (checked
+  allclose), and the scheduling-only throughput of the routed
+  ``fedhap_async`` event loop vs fedhap rounds.
 - **sweep** — ``haps:N`` / ``grid:RxC`` station scenarios crossed with
   large Walker shells: records grid-build time and scheduler-only
   FedHAP rounds/sec (local SGD excluded, as in ``sim_wallclock``).
@@ -33,6 +39,11 @@ from repro.orbits import (
     WalkerConstellation,
     visibility_mask,
     visibility_mask_pairwise,
+)
+from repro.orbits.routing import (
+    build_contact_graph,
+    earliest_arrival,
+    earliest_arrival_reference,
 )
 from repro.sim import SimConfig
 from repro.sim.engine import RoundEngine, _make_stations
@@ -115,6 +126,107 @@ def bench_delay_table(stations: str, shell: tuple[int, int],
     }
 
 
+def bench_routing_build(shell: tuple[int, int], horizon_h: float,
+                        step_s: float, n_params: int = 100_000) -> dict:
+    """Contact-graph compile cost for one shell: stacked propagation,
+    chunked all-pairs LoS grid, and the vectorized edge-next sweep."""
+    con = WalkerConstellation(shell[0], shell[1])
+    ts = np.arange(int(horizon_h * 3600 / step_s) + 2) * step_s
+    t0 = time.perf_counter()
+    pos = con.positions_eci(ts)
+    propagate_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    graph = build_contact_graph(con, ts, n_params, positions=pos)
+    build_s = time.perf_counter() - t0
+    mb = (graph.isl_vis.nbytes + graph.edge_next.nbytes) / 2**20
+    return {
+        "shell": f"{shell[0]}x{shell[1]}", "n_sats": len(con),
+        "T": len(ts), "horizon_h": horizon_h,
+        "propagate_s": round(propagate_s, 4),
+        "build_s": round(build_s, 4),
+        "table_mb": round(mb, 1),
+        "isl_density": round(float(graph.isl_vis.mean()), 4),
+    }
+
+
+def bench_earliest_arrival(shell: tuple[int, int] = (5, 8),
+                           horizon_h: float = 6.0, step_s: float = 60.0,
+                           n_ref_sources: int = 4) -> dict:
+    """Batched all-sources earliest-arrival vs the per-edge Python
+    reference (must agree allclose — the routing acceptance check)."""
+    con = WalkerConstellation(shell[0], shell[1])
+    ts = np.arange(int(horizon_h * 3600 / step_s) + 2) * step_s
+    graph = build_contact_graph(con, ts, 100_000)
+    S = len(con)
+    t0 = time.perf_counter()
+    arr = earliest_arrival(graph, np.arange(S), 0.0)
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for src in range(n_ref_sources):
+        ref = earliest_arrival_reference(graph, src, 0.0)
+        assert np.allclose(np.nan_to_num(arr[src], posinf=1e18),
+                           np.nan_to_num(ref, posinf=1e18),
+                           rtol=1e-9, atol=1e-6), \
+            "batched earliest-arrival != per-edge reference"
+    reference_s = (time.perf_counter() - t0) * (S / n_ref_sources)
+    return {
+        "shell": f"{shell[0]}x{shell[1]}", "n_sats": S, "T": len(ts),
+        "sources": S,
+        "batched_s": round(batched_s, 4),
+        "reference_s": round(reference_s, 4),
+        "speedup": round(reference_s / batched_s, 2),
+        "reachable_frac": round(float(np.isfinite(arr).mean()), 4),
+    }
+
+
+def bench_async_sweep(rounds: int, horizon_h: float = 168.0) -> dict:
+    """Scheduling-only fedhap_async event throughput vs fedhap rounds on
+    the paper 5x8 shell (same engine, same exclusion of local SGD)."""
+    from benchmarks.sim_wallclock import run_wallclock, run_wallclock_async
+    cfg = SimConfig(strategy="fedhap_async", stations="two_hap",
+                    num_orbits=5, sats_per_orbit=8,
+                    horizon_h=horizon_h, time_step_s=30.0, **_SIM_LITE)
+    eng = RoundEngine(cfg)
+    a = run_wallclock_async(cfg, rounds=rounds, eng=eng)
+    f = run_wallclock(cfg, rounds=rounds, compare_legacy=False, eng=eng)
+    return {
+        "shell": "5x8", "stations": "two_hap", "rounds": a["rounds"],
+        "async_rps": round(a["async_rps"], 2),
+        "fedhap_rps": round(f["engine_rps"], 2),
+        "ratio": round(a["async_rps"] / f["engine_rps"], 3),
+    }
+
+
+def bench_routing(smoke: bool) -> dict:
+    if smoke:
+        build_shells = [((5, 8), 6.0), ((6, 10), 6.0)]
+        ea_kw = dict(horizon_h=3.0, n_ref_sources=2)
+        sweep_rounds, sweep_horizon = 20, 72.0
+    else:
+        build_shells = [((5, 8), 12.0), ((10, 20), 6.0), ((20, 40), 2.0)]
+        ea_kw = dict(horizon_h=6.0, n_ref_sources=4)
+        sweep_rounds, sweep_horizon = 100, 168.0
+
+    doc: dict = {"table_build": []}
+    for shell, horizon_h in build_shells:
+        row = bench_routing_build(shell, horizon_h, 60.0)
+        doc["table_build"].append(row)
+        print(f"routing.build[{row['shell']} x {row['T']}t]: "
+              f"{row['build_s']:.3f}s ({row['table_mb']:.0f} MB)",
+              flush=True)
+    doc["earliest_arrival"] = bench_earliest_arrival(**ea_kw)
+    r = doc["earliest_arrival"]
+    print(f"routing.earliest_arrival[{r['shell']}]: batched "
+          f"{r['batched_s']:.4f}s vs per-edge {r['reference_s']:.2f}s "
+          f"({r['speedup']:.0f}x, allclose)", flush=True)
+    doc["async_sweep"] = bench_async_sweep(sweep_rounds, sweep_horizon)
+    r = doc["async_sweep"]
+    print(f"routing.async_sweep[5x8]: fedhap_async {r['async_rps']:.1f} "
+          f"events/s vs fedhap {r['fedhap_rps']:.1f} rounds/s "
+          f"(ratio {r['ratio']:.2f})", flush=True)
+    return doc
+
+
 def bench_sweep(scenarios, horizon_h: float, step_s: float,
                 rounds: int = 10) -> list[dict]:
     """Mega-constellation sweep: grid build + scheduler rounds/sec."""
@@ -174,6 +286,8 @@ def run(smoke: bool = False, sim_wallclock: bool = False,
     print(f"delay_table[two_hap x {r['shell']}]: lookup {r['lookup_us']}us "
           f"gather {r['gather_us']}us vs reference {r['reference_us']}us "
           f"({r['speedup']:.0f}x)", flush=True)
+
+    doc["routing"] = bench_routing(smoke)
 
     doc["sweep"] = bench_sweep(sweep_scenarios, horizon_h, step_s,
                                rounds=sweep_rounds)

@@ -21,7 +21,7 @@ import jax
 from repro.core.aggregation import full_aggregate, segment_upload_weights
 from repro.core.treeops import tree_add, tree_scale
 from repro.sim import SatcomSimulator, SimConfig
-from repro.sim.strategies import FedHap
+from repro.sim.strategies import FedHap, FedHapAsync
 
 
 def _legacy_first_contacts(eng, t):
@@ -82,17 +82,18 @@ def _legacy_round(eng, stacked, t):
 
 
 def run_wallclock(cfg: SimConfig, rounds: int = 25,
-                  compare_legacy: bool = True) -> dict:
+                  compare_legacy: bool = True,
+                  eng: SatcomSimulator | None = None) -> dict:
     """Drive `rounds` FedHAP rounds through both simulator paths.
 
     Returns {"engine_rps", "legacy_rps", "speedup", "rounds"}.
     """
-    eng = SatcomSimulator(cfg)
+    eng = eng if eng is not None else SatcomSimulator(cfg)
     strat = FedHap()
     params = eng.trainer.init(cfg.seed)
     stacked = eng.trainer.stack([params] * eng.n_sats)
     jax.block_until_ready(stacked)
-    ring = 2 * (len(eng.stations) - 1) * eng.ihl_delay()
+    ring = eng.ring_delay()
 
     def drive_engine():
         t, n = 0.0, 0
@@ -133,6 +134,51 @@ def run_wallclock(cfg: SimConfig, rounds: int = 25,
         out["legacy_rps"] = n_l / dt_l
         out["speedup"] = out["engine_rps"] / out["legacy_rps"]
     return out
+
+
+def run_wallclock_async(cfg: SimConfig, rounds: int = 100,
+                        eng: SatcomSimulator | None = None) -> dict:
+    """Scheduling-only throughput of the routed ``fedhap_async`` event
+    loop (local SGD excluded, as in :func:`run_wallclock`): drives the
+    strategy's own :meth:`schedule_cycle` pricing — sink election,
+    contact-graph routing, batched station-exit gathers — plus the
+    per-arrival fold arithmetic on fixed stacked params.
+
+    Returns ``{"rounds", "async_rps"}``.
+    """
+    eng = eng if eng is not None else SatcomSimulator(cfg)
+    strat = FedHapAsync()
+    params = eng.trainer.init(cfg.seed)
+    stacked_k = eng.trainer.stack([params] * cfg.sats_per_orbit)
+    jax.block_until_ready(stacked_k)
+    total = eng.sizes.sum()
+
+    def drive():
+        inflight = {}
+        for l in range(cfg.num_orbits):
+            nxt = strat.schedule_cycle(eng, l, 0.0)
+            if nxt is not None and nxt[0] <= eng.horizon_s:
+                inflight[l] = nxt
+        glob, n = params, 0
+        while n < rounds and inflight:
+            l = min(inflight, key=lambda x: inflight[x][0])
+            t, lam = inflight.pop(l)
+            rho = float(eng.sizes[eng.orbit_slice(l)].sum() / total)
+            glob = tree_add(tree_scale(glob, 1.0 - rho),
+                            tree_scale(eng.combine(stacked_k, lam), rho))
+            jax.block_until_ready(glob)
+            n += 1
+            nxt = strat.schedule_cycle(eng, l, t)
+            if nxt is not None and nxt[0] <= eng.horizon_s:
+                inflight[l] = nxt
+        return n
+
+    drive()                       # warm jit/dispatch + the contact graph
+    eng._sink_cache.clear()       # time steady-state pricing, not memo hits
+    t0 = time.perf_counter()
+    n = drive()
+    dt = time.perf_counter() - t0
+    return {"rounds": n, "async_rps": n / dt}
 
 
 def report(tag: str, cfg: SimConfig, rounds: int = 25) -> dict:

@@ -15,9 +15,11 @@ The simulator is a **strategy registry on a shared vectorized engine**:
   chain-weight math is duplicated anywhere else.
 - ``repro.sim.engine.RoundEngine`` owns the physical world, the round
   loop, precomputed **next-contact tables** (O(1) contact queries over
-  the visibility grid instead of per-round Python scans), and
+  the visibility grid instead of per-round Python scans),
   **einsum aggregation** over stacked per-satellite params (no
-  ``unstack``, no Python tree folds).
+  ``unstack``, no Python tree folds), and the **route/sink caches** of
+  the ISL routing subsystem (``repro.orbits.routing``: time-expanded
+  contact graphs, batched earliest-arrival search, sink election).
 - Each method below is a small class registered in
   ``repro.sim.strategies`` supplying only its scheduling + weighting
   rules; ``SimConfig.strategy`` resolves through
@@ -36,6 +38,13 @@ Mapping to the paper's Table II rows:
 | fedisl_ideal    | FedISL (ideal)       | MEO PS above the equator  |
 | fedsat          | FedSat (ideal)       | GS at the North Pole      |
 | fedspace        | FedSpace             | GS, arbitrary location    |
+
+Beyond the paper's rows, the routed sink-scheduling family (successor
+work, Elmahallawy & Luo arXiv:2302.13447) rides the same registry:
+``fedsink`` (intra-plane propagation to an elected sink that does the
+SHL exchange), ``fedhap_async`` (HAPs fold whatever routed models have
+arrived, staleness-discounted), and ``fedhap_buffered`` (buffer-then-
+flush along routed cross-plane multi-hop paths).
 """
 from repro.sim.engine import RoundEngine, SatcomSimulator, SimConfig, SimResult
 from repro.sim.strategies import (

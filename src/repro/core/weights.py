@@ -192,6 +192,21 @@ def mu_from_chain(
     return seg_mass / sizes.sum() * lam
 
 
+def staleness_discount(staleness: Any, power: float = 0.5,
+                       xp: Any = np) -> Any:
+    """Multiplicative staleness discount ``1 / (1 + s)^p``.
+
+    The FedBuff/FedSpace-style polynomial down-weighting of updates that
+    trained against an old global model — the single definition shared
+    by the simulator's buffered baseline (``fedspace``) and the routed
+    asynchronous FedHAP strategies (``fedhap_async`` /
+    ``fedhap_buffered``), which apply it on top of the Eq. 14-16
+    closed-form weights. ``staleness`` counts aggregation events since
+    the update's base model; batched over any shape.
+    """
+    return 1.0 / (1.0 + xp.asarray(staleness)) ** power
+
+
 def mu_weights(
     visible: Any,
     sizes: Any,
@@ -217,5 +232,5 @@ def mu_weights(
 __all__ = [
     "PARTIAL_MODES", "ORBIT_WEIGHTINGS",
     "chain_weights", "chain_stats", "segment_ends",
-    "mu_from_chain", "mu_weights",
+    "mu_from_chain", "mu_weights", "staleness_discount",
 ]

@@ -14,6 +14,12 @@ single broadcasted elevation tests (`visibility_mask`,
 (`is_visible`, `visibility_mask_pairwise`) remain as equivalence
 references and benchmark baselines. Link-budget functions are
 vectorized over distance so delay tables over whole grids are one call.
+
+On top of the grids sits the routing subsystem (`repro.orbits.routing`):
+time-expanded ISL contact graphs (`build_contact_graph`), batched
+earliest-arrival search (`earliest_arrival`), routed multi-hop path
+extraction, and per-orbit sink election (`elect_sinks`) — the substrate
+of the simulator's fedsink / fedhap_async / fedhap_buffered strategies.
 """
 from repro.orbits.constellation import (
     EARTH_RADIUS_M,
@@ -30,6 +36,7 @@ from repro.orbits.visibility import (
     effective_min_elevation_deg,
     elevation_angle_deg,
     is_visible,
+    isl_mask_from_positions,
     iter_distance_chunks,
     mask_from_positions,
     next_contact_table,
@@ -40,6 +47,16 @@ from repro.orbits.visibility import (
     visibility_mask_pairwise,
     visibility_windows,
     windows_from_mask,
+)
+from repro.orbits.routing import (
+    ContactGraph,
+    SinkElection,
+    build_contact_graph,
+    earliest_arrival,
+    earliest_arrival_reference,
+    elect_sinks,
+    extract_path,
+    predecessors,
 )
 from repro.orbits.links import (
     FSO_DEFAULTS,
@@ -59,11 +76,14 @@ __all__ = [
     "ephemeris_positions_eci", "orbital_period_s", "orbital_speed_ms",
     "station_positions_eci",
     "Station", "effective_min_elevation_deg", "elevation_angle_deg",
-    "is_visible", "iter_distance_chunks", "mask_from_positions",
-    "next_contact_table",
+    "is_visible", "isl_mask_from_positions", "iter_distance_chunks",
+    "mask_from_positions", "next_contact_table",
     "sat_sat_visibility_mask", "sat_sat_visible", "stations_eci",
     "visibility_mask", "visibility_mask_pairwise", "visibility_windows",
     "windows_from_mask",
+    "ContactGraph", "SinkElection", "build_contact_graph",
+    "earliest_arrival", "earliest_arrival_reference", "elect_sinks",
+    "extract_path", "predecessors",
     "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
     "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",
     "rf_snr", "shannon_rate_bps",

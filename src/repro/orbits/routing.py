@@ -1,0 +1,357 @@
+"""Time-expanded contact-graph routing over ISL line-of-sight grids.
+
+FedHAP's speedup comes from models hopping between satellites over
+inter-satellite links; the successor work (Elmahallawy & Luo,
+arXiv:2302.13447) shows that *which* satellite sinks an orbit's model and
+along *which* ISL path it travels is the next lever. This module is that
+routing subsystem, built on the batched geometry engine:
+
+- :class:`ContactGraph` — the time-expanded graph: the all-pairs
+  ``(S, S, T)`` ISL LoS grid (`repro.orbits.sat_sat_visibility_mask` /
+  `isl_mask_from_positions`) compiled into a next-contact *edge table*
+  (one ``minimum.accumulate`` per edge series, the same trick as the
+  engine's station contact tables), plus the stacked ``(S, T, 3)``
+  positions used to price each edge at its actual contact geometry.
+- :func:`earliest_arrival` — batched shortest-delay search: a
+  label-correcting Bellman-Ford over time slices, expressed as
+  ``(N, S, S)`` array relaxations (gather next contact -> price edge ->
+  min-reduce), no per-edge Python. Waiting at a satellite is free; a
+  transmission departs at the edge's next contact on the grid.
+- :func:`predecessors` / :func:`extract_path` — routed multi-hop paths
+  recovered from the converged arrival table.
+- :func:`earliest_arrival_reference` — the per-edge Python
+  label-correcting reference the batched search must match (allclose).
+- :func:`elect_sinks` — per-orbit sink election: each candidate is
+  scored by the Eq.-14 chain weights of its members
+  (`repro.core.weights.chain_stats` with a one-hot visible ring — the
+  closed-form intra-plane propagation weighting) applied to the members'
+  routed arrival delays, plus a caller-supplied exit cost (e.g. wait
+  until the candidate's next station contact + SHL transfer).
+
+Delay model: every ISL is FSO (paper §III-A); an edge departing at
+contact index ``j`` costs ``model_transfer_delay_s(n_params, |r_a(t_j) -
+r_b(t_j)|, "fso")`` and arrives at ``grid_t[j] + delay``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.weights import chain_stats
+from repro.orbits.constellation import WalkerConstellation
+from repro.orbits.links import model_transfer_delay_s
+from repro.orbits.visibility import isl_mask_from_positions, next_contact_table
+
+_EPS_S = 1e-9      # arrival-improvement tolerance (seconds)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContactGraph:
+    """Time-expanded ISL contact graph over a uniform time grid.
+
+    ``grid_t``: ``(T,)`` seconds (uniform step); ``positions``:
+    ``(S, T, 3)`` ECI; ``isl_vis``: ``(S, S, T)`` bool LoS grid (zero
+    diagonal); ``edge_next``: ``(S, S, T)`` int — ``edge_next[a, b, i]``
+    is the smallest grid index ``j >= i`` with the (a, b) ISL up, or the
+    sentinel ``T``; ``n_params`` prices edges via the FSO link budget.
+    """
+    grid_t: np.ndarray
+    positions: np.ndarray
+    isl_vis: np.ndarray
+    edge_next: np.ndarray
+    n_params: int
+
+    @property
+    def n_sats(self) -> int:
+        return self.positions.shape[0]
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.grid_t)
+
+    @property
+    def step_s(self) -> float:
+        return float(self.grid_t[1] - self.grid_t[0]) if self.n_steps > 1 \
+            else 1.0
+
+    def time_index(self, t_s) -> np.ndarray:
+        """Smallest grid index with ``grid_t[i] >= t`` (ceil); the
+        sentinel ``n_steps`` past the grid end or for non-finite t."""
+        t = np.asarray(t_s, dtype=np.float64)
+        T = self.n_steps
+        fin = np.isfinite(t)
+        rel = (np.where(fin, t, 0.0) - self.grid_t[0]) / self.step_s
+        i = np.clip(np.ceil(rel - 1e-9).astype(np.int64), 0, T)
+        return np.where(fin, i, T)
+
+    def edge_delay(self, a_idx, b_idx, t_idx) -> np.ndarray:
+        """FSO transfer delay of edges (a, b) departing at grid index
+        ``t_idx``; all three index arrays broadcast together."""
+        pa = self.positions[a_idx, t_idx]
+        pb = self.positions[b_idx, t_idx]
+        dist = np.linalg.norm(pa - pb, axis=-1)
+        return model_transfer_delay_s(self.n_params, dist, "fso")
+
+
+def build_contact_graph(
+    constellation: WalkerConstellation,
+    grid_t: np.ndarray,
+    n_params: int,
+    grazing_altitude_m: float = 80_000.0,
+    positions: Optional[np.ndarray] = None,
+) -> ContactGraph:
+    """Compile the time-expanded ISL contact graph for a constellation.
+
+    One stacked propagation (reused when ``positions`` is supplied, e.g.
+    a window of the engine's cached ephemeris), one chunked LoS grid
+    build, and one vectorized next-contact sweep per edge series. The
+    edge table is int16 when the grid fits (it does for every simulator
+    horizon under ~32k steps), halving the dominant allocation on
+    mega-constellation shells.
+    """
+    grid_t = np.asarray(grid_t, dtype=np.float64)
+    if positions is None:
+        positions = constellation.positions_eci(grid_t)
+    isl = isl_mask_from_positions(positions, grazing_altitude_m)
+    dtype = np.int16 if len(grid_t) < np.iinfo(np.int16).max else np.int32
+    edge_next = next_contact_table(isl, dtype=dtype)
+    return ContactGraph(grid_t=grid_t, positions=positions, isl_vis=isl,
+                        edge_next=edge_next, n_params=n_params)
+
+
+def subgraph(graph: ContactGraph, sat_ids: Sequence[int]) -> ContactGraph:
+    """Induced contact graph over a subset of satellites (local ids
+    0..n-1 in ``sat_ids`` order). Edge series are per-pair independent,
+    so the sub-tables are plain gathers of the compiled full tables —
+    used for intra-plane routing (sink election propagates models inside
+    one orbit ring) where relaxing over the whole shell would be waste.
+    """
+    ids = np.asarray(sat_ids, dtype=np.int64)
+    return ContactGraph(
+        grid_t=graph.grid_t,
+        positions=graph.positions[ids],
+        isl_vis=graph.isl_vis[np.ix_(ids, ids)],
+        edge_next=graph.edge_next[np.ix_(ids, ids)],
+        n_params=graph.n_params,
+    )
+
+
+def earliest_arrival(
+    graph: ContactGraph,
+    sources: Sequence[int],
+    t0: float,
+    max_hops: Optional[int] = None,
+) -> np.ndarray:
+    """Batched earliest-arrival over the time-expanded graph.
+
+    ``sources``: ``(N,)`` satellite ids, each holding a model at time
+    ``t0``. Returns ``(N, S)`` float arrival times (``inf`` where
+    unreachable within the grid); ``arr[n, sources[n]] == t0``.
+
+    Label-correcting relaxation as array ops: each sweep gathers every
+    edge's next contact after the current arrival frontier, prices it at
+    the contact geometry, and min-reduces over predecessors — one
+    ``(N, S, S)`` evaluation per sweep, converging in at most the hop
+    diameter of the graph (capped at ``max_hops``, default S).
+    """
+    S, T = graph.n_sats, graph.n_steps
+    src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    N = len(src)
+    arr = np.full((N, S), np.inf)
+    arr[np.arange(N), src] = float(t0)
+    aidx = np.arange(S)[None, :, None]
+    bidx = np.arange(S)[None, None, :]
+    for _ in range(max_hops or S):
+        cand = _relax_candidates(graph, arr, aidx, bidx)
+        best = cand.min(axis=1)
+        improved = best < arr - _EPS_S
+        if not improved.any():
+            break
+        arr = np.where(improved, best, arr)
+    return arr
+
+
+def _relax_candidates(graph: ContactGraph, arr: np.ndarray,
+                      aidx: np.ndarray, bidx: np.ndarray) -> np.ndarray:
+    """One relaxation sweep: candidate arrivals ``(N, S, S)`` of every
+    model at ``a`` (arrival ``arr[n, a]``) forwarded over edge (a, b)."""
+    T = graph.n_steps
+    ia = graph.time_index(arr)                            # (N, S)
+    nxt = graph.edge_next[aidx, bidx,
+                          np.minimum(ia, T - 1)[:, :, None]]
+    nxt = np.where((ia < T)[:, :, None], nxt, T).astype(np.int64)
+    j = np.minimum(nxt, T - 1)
+    start = graph.grid_t[j]
+    return np.where(nxt < T, start + graph.edge_delay(aidx, bidx, j),
+                    np.inf)
+
+
+def predecessors(graph: ContactGraph, sources: Sequence[int],
+                 arr: np.ndarray) -> np.ndarray:
+    """Predecessor table of a converged :func:`earliest_arrival` result.
+
+    One extra relaxation sweep against the final arrival times; returns
+    ``(N, S)`` int — the satellite the shortest-delay route enters
+    ``b`` from, or -1 at sources and unreachable satellites.
+    """
+    S = graph.n_sats
+    src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    aidx = np.arange(S)[None, :, None]
+    bidx = np.arange(S)[None, None, :]
+    cand = _relax_candidates(graph, arr, aidx, bidx)
+    best = cand.min(axis=1)
+    pred = cand.argmin(axis=1)
+    settled = np.isfinite(arr) & (best <= arr + 1e-6)
+    pred = np.where(settled, pred, -1)
+    pred[np.arange(len(src)), src] = -1
+    return pred
+
+
+def extract_path(pred_row: np.ndarray, source: int, dest: int) -> list[int]:
+    """Walk one predecessor row back from ``dest``; returns the hop list
+    ``[source, ..., dest]`` or ``[]`` when ``dest`` is unreachable."""
+    if dest == source:
+        return [source]
+    path = [dest]
+    cur = dest
+    for _ in range(len(pred_row)):
+        cur = int(pred_row[cur])
+        if cur < 0:
+            return []
+        path.append(cur)
+        if cur == source:
+            return path[::-1]
+    return []
+
+
+def earliest_arrival_reference(graph: ContactGraph, source: int,
+                               t0: float) -> np.ndarray:
+    """Per-edge Python label-correcting reference (equivalence baseline
+    for :func:`earliest_arrival`); returns ``(S,)`` arrival times."""
+    S, T = graph.n_sats, graph.n_steps
+    arr = np.full(S, np.inf)
+    arr[source] = float(t0)
+    changed = True
+    while changed:
+        changed = False
+        for a in range(S):
+            ia = int(graph.time_index(arr[a]))
+            if ia >= T:
+                continue
+            for b in range(S):
+                j = int(graph.edge_next[a, b, ia])
+                if j >= T:
+                    continue
+                cand = float(graph.grid_t[j]) \
+                    + float(graph.edge_delay(a, b, j))
+                if cand < arr[b] - _EPS_S:
+                    arr[b] = cand
+                    changed = True
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class SinkElection:
+    """Per-orbit sink election result (all arrays over L orbits).
+
+    ``sinks``: elected satellite ids; ``sink_slots``: their in-ring
+    slots; ``scores``: the winning aggregate-reachability scores (inf
+    when no candidate of the orbit can exit before the horizon);
+    ``lam``: ``(L, K)`` Eq.-14 chain weights of each orbit's members for
+    the elected sink's chain; ``delivery``: when the last member's
+    contribution reaches the elected sink; ``all_scores``: ``(L, K)``
+    scores of every candidate (diagnostics/benchmarks).
+    """
+    sinks: np.ndarray
+    sink_slots: np.ndarray
+    scores: np.ndarray
+    lam: np.ndarray
+    delivery: np.ndarray
+    all_scores: np.ndarray
+
+
+def onehot_chain_weights(sizes: np.ndarray,
+                         partial_mode: str = "paper") -> np.ndarray:
+    """Eq.-14 chain weights of every sink candidacy: ``lam[..., c, m]``
+    is member ``m``'s weight in the ring where only candidate ``c`` is
+    visible (the intra-plane propagation chain delivering to ``c``).
+    Time-independent — engines precompute this once per orbit.
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    K = sizes.shape[-1]
+    shape = sizes.shape[:-1] + (K, K)
+    onehot = np.broadcast_to(np.eye(K, dtype=bool), shape)
+    lam, _ = chain_stats(onehot,
+                         np.broadcast_to(sizes[..., None, :], shape),
+                         partial_mode)
+    return lam
+
+
+ExitCost = Union[np.ndarray, Callable[[np.ndarray, np.ndarray], np.ndarray]]
+
+
+def elect_sinks(
+    graph: ContactGraph,
+    members: np.ndarray,
+    sizes: np.ndarray,
+    t0: float,
+    exit_cost_s: ExitCost,
+    partial_mode: str = "paper",
+    lam: Optional[np.ndarray] = None,
+) -> SinkElection:
+    """Elect one sink satellite per orbit by aggregate reachability delay.
+
+    ``members``: ``(L, K)`` satellite ids in ring-slot order; ``sizes``:
+    ``(L, K)`` data masses; ``exit_cost_s``: the cost of getting the
+    folded model off each candidate (wait for station contact + SHL
+    transfer; inf when the candidate has none left) — either a
+    ``(L, K)`` array, or a callable ``(members, delivery) -> (L, K)``
+    receiving each candidate's *own* delivery time (when the last
+    member's contribution reaches it), so exits are priced at the
+    moment the model is actually ready, not at election time (a contact
+    window can close while the chain is still folding).
+
+    Candidate ``c``'s score is the Eq.-style weighted mean of its
+    members' routed arrival delays — weights are the closed-form Eq.-14
+    chain weights of the ring with only ``c`` visible
+    (:func:`onehot_chain_weights`, precomputable via ``lam``), i.e.
+    exactly the weights the intra-plane propagation chain gives each
+    member's model — plus the candidate's exit cost. The argmin
+    candidate per orbit wins.
+    """
+    members = np.asarray(members, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    L, K = members.shape
+    arr = earliest_arrival(graph, members.reshape(-1), t0)
+    arr = arr.reshape(L, K, graph.n_sats)
+    # arrd[l, c, m]: member m's arrival time at candidate c's satellite.
+    arrd = arr[np.arange(L)[:, None, None],
+               np.arange(K)[None, :, None],
+               members[:, None, :]].transpose(0, 2, 1)
+    delivery = arrd.max(axis=-1)                           # (L, c)
+    if callable(exit_cost_s):
+        exit_cost_s = exit_cost_s(members, delivery)
+    exit_cost_s = np.asarray(exit_cost_s, dtype=np.float64)
+    if lam is None:
+        lam = onehot_chain_weights(sizes, partial_mode)
+    delay = arrd - t0                                      # (L, c, m)
+    score = np.where(lam > 0, lam * delay, 0.0).sum(axis=-1) + exit_cost_s
+    slots = np.argmin(score, axis=1).astype(np.int64)
+    l_idx = np.arange(L)
+    return SinkElection(
+        sinks=members[l_idx, slots],
+        sink_slots=slots,
+        scores=score[l_idx, slots],
+        lam=lam[l_idx, slots],
+        delivery=delivery[l_idx, slots],
+        all_scores=score,
+    )
+
+
+__all__ = [
+    "ContactGraph", "SinkElection", "build_contact_graph",
+    "earliest_arrival", "earliest_arrival_reference", "elect_sinks",
+    "extract_path", "onehot_chain_weights", "predecessors", "subgraph",
+]

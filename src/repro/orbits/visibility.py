@@ -269,7 +269,7 @@ def visibility_windows(
     return windows_from_mask(vis, ts)
 
 
-def next_contact_table(vis: np.ndarray) -> np.ndarray:
+def next_contact_table(vis: np.ndarray, dtype=np.int64) -> np.ndarray:
     """Next-contact lookup over a precomputed visibility grid.
 
     ``vis``: ``(..., T)`` bool time series (any leading batch dims:
@@ -280,11 +280,15 @@ def next_contact_table(vis: np.ndarray) -> np.ndarray:
 
     One reversed ``minimum.accumulate`` per series replaces the O(T)
     Python scan the simulator used to run per orbit per round: contact
-    queries become O(1) lookups.
+    queries become O(1) lookups. ``dtype`` shrinks the table for dense
+    edge grids (the routing subsystem's (S, S, T) tables use int16 when
+    the sentinel fits).
     """
     vis = np.asarray(vis, dtype=bool)
     T = vis.shape[-1]
-    idx = np.where(vis, np.arange(T), T)
+    if T >= np.iinfo(dtype).max:
+        raise ValueError(f"{T} time steps overflow {np.dtype(dtype).name}")
+    idx = np.where(vis, np.arange(T, dtype=dtype), np.asarray(T, dtype=dtype))
     return np.minimum.accumulate(idx[..., ::-1], axis=-1)[..., ::-1]
 
 
@@ -304,6 +308,26 @@ def sat_sat_visible(
     return np.linalg.norm(closest, axis=-1) >= EARTH_RADIUS_M + grazing_altitude_m
 
 
+def isl_mask_from_positions(
+    pos: np.ndarray, grazing_altitude_m: float = 80_000.0
+) -> np.ndarray:
+    """All-pairs ISL LoS grid from a stacked ``(S, T, 3)`` position
+    tensor; returns ``(S, S, T)`` bool, evaluated in cache-sized time
+    chunks of :func:`sat_sat_visible`. The diagonal is zeroed — a
+    satellite has no ISL to itself, and the routing subsystem's edge
+    tables must not contain self-loops.
+    """
+    S, T = pos.shape[0], pos.shape[1]
+    out = np.empty((S, S, T), dtype=bool)
+    chunk = max(1, (1 << 25) // max(1, S * S * 3 * 8))
+    for i in range(0, T, chunk):
+        sl = slice(i, min(i + chunk, T))
+        out[:, :, sl] = sat_sat_visible(
+            pos[:, None, sl, :], pos[None, :, sl, :], grazing_altitude_m)
+    out[np.arange(S), np.arange(S)] = False
+    return out
+
+
 def sat_sat_visibility_mask(
     constellation: WalkerConstellation,
     t_s: float | np.ndarray,
@@ -313,15 +337,11 @@ def sat_sat_visibility_mask(
 
     One stacked propagation + a time-chunked (S, S, T_chunk) broadcast of
     :func:`sat_sat_visible` — the ISL-gating analogue of
-    :func:`visibility_mask` for cross-plane routing strategies.
+    :func:`visibility_mask` feeding the contact-graph router
+    (`repro.orbits.routing`). The diagonal is zero (no self-links).
     """
     t = np.asarray(t_s, dtype=np.float64)
     pos = constellation.positions_eci(t).reshape(len(constellation), -1, 3)
-    S, T = pos.shape[0], pos.shape[1]
-    out = np.empty((S, S, T), dtype=bool)
-    chunk = max(1, (1 << 25) // max(1, S * S * 3 * 8))
-    for i in range(0, T, chunk):
-        sl = slice(i, min(i + chunk, T))
-        out[:, :, sl] = sat_sat_visible(
-            pos[:, None, sl, :], pos[None, :, sl, :], grazing_altitude_m)
-    return out.reshape((S, S) + t.shape)
+    S = pos.shape[0]
+    return isl_mask_from_positions(pos, grazing_altitude_m).reshape(
+        (S, S) + t.shape)

@@ -34,15 +34,24 @@ Architecture (see also ``repro.core.strategies``):
     :mod:`repro.core.weights` (the single source of truth shared with
     the mesh round and the launch driver).
 
-- Strategies (fedhap | fedisl | fedisl_ideal | fedsat | fedspace) are
-  small registered classes under ``repro.sim.strategies`` supplying only
-  scheduling + weighting rules; ``SimConfig.strategy`` resolves through
-  the registry, so new methods and scenarios are config, not simulator
-  edits.
+  * **route/sink caches** — the ISL routing subsystem
+    (:mod:`repro.orbits.routing`) plugs in through
+    :meth:`RoundEngine.contact_graph` (windowed, cached time-expanded
+    contact graphs over the all-pairs ISL LoS grid) and
+    :meth:`RoundEngine.elect_sinks` (memoized per-orbit sink elections);
+    :meth:`RoundEngine.station_upload_end` prices whole batches of
+    routed exits (next station contact + SHL transfer) in one gather.
+
+- Strategies (fedhap | fedisl | fedisl_ideal | fedsat | fedspace |
+  fedsink | fedhap_async | fedhap_buffered) are small registered classes
+  under ``repro.sim.strategies`` supplying only scheduling + weighting
+  rules; ``SimConfig.strategy`` resolves through the registry, so new
+  methods and scenarios are config, not simulator edits.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Optional, Union
 
 import numpy as np
@@ -66,6 +75,14 @@ from repro.orbits import (
     model_transfer_delay_s,
     next_contact_table,
     stations_eci,
+)
+from repro.orbits.routing import (
+    ContactGraph,
+    SinkElection,
+    build_contact_graph,
+    elect_sinks,
+    onehot_chain_weights,
+    subgraph,
 )
 from repro.orbits.visibility import DALLAS, ROLLA
 from repro.sim.strategies import RunState, Strategy, get_strategy
@@ -105,6 +122,13 @@ class SimConfig:
     # geometry engine: budget for the eager (n_st, n_sat, T) float32
     # SHL-delay table; grids past it fall back to lazy per-column compute
     delay_table_max_bytes: int = 512 * 2**20
+    # LRU capacity (in columns) of the lazy per-column delay cache
+    delay_column_cache: int = 4096
+    # routing subsystem: budget for one windowed (S, S, W) contact graph
+    # (ISL LoS grid + int16 edge table); grids past it route over
+    # sliding windows of the horizon instead of the whole grid
+    isl_grid_max_bytes: int = 256 * 2**20
+    isl_grazing_altitude_m: float = 80_000.0
 
 
 @dataclasses.dataclass
@@ -212,14 +236,27 @@ class RoundEngine:
             self.shl_table = self._build_delay_table(st_pos, sat_pos)
         else:
             self.shl_table = None       # mega grids: lazy per-column cache
-        self._delay_cols: dict[int, np.ndarray] = {}
+        self._delay_cols: OrderedDict[int, np.ndarray] = OrderedDict()
 
-        # Any-station visibility, per-orbit series + next-contact table:
+        # Any-station visibility, per-orbit series + next-contact tables:
         # contact queries are O(1) lookups instead of per-round scans.
         L, k = cfg.num_orbits, cfg.sats_per_orbit
         self.any_vis = self.vis.any(axis=0)                 # (n_sat, T)
         self.orbit_vis = self.any_vis.reshape(L, k, -1).any(axis=1)  # (L, T)
         self.orbit_next = next_contact_table(self.orbit_vis)     # (L, T)
+        self.sat_next = next_contact_table(self.any_vis)         # (S, T)
+
+        # Routing substrate: the stacked satellite ephemeris is kept for
+        # windowed contact-graph builds; graphs, per-orbit intra-plane
+        # subgraphs, and sink elections are built lazily and memoized
+        # (route/sink caches). The one-hot Eq.-14 chain weights behind
+        # sink scoring are time-independent: computed once per orbit.
+        self._sat_pos = sat_pos                             # (S, T, 3)
+        self._contact_graphs: OrderedDict[int, ContactGraph] = OrderedDict()
+        self._orbit_graphs: OrderedDict[Any, ContactGraph] = OrderedDict()
+        self._sink_cache: OrderedDict[Any, SinkElection] = OrderedDict()
+        self._onehot_lam = onehot_chain_weights(
+            self.sizes.reshape(L, k), cfg.partial_mode)     # (L, k, k)
 
         # Static intra-orbit ISL geometry (circular orbits: constant).
         a, b = (self.constellation.orbit_members(0)[0],
@@ -265,17 +302,22 @@ class RoundEngine:
 
     def _delay_column(self, tidx: int) -> np.ndarray:
         """Lazy path for grids past ``delay_table_max_bytes``: compute
-        (and memoize) one (n_st, n_sat) delay column from the ephemeris."""
+        one (n_st, n_sat) delay column from the ephemeris, memoized in
+        an LRU of ``SimConfig.delay_column_cache`` columns (mega-grid
+        sweeps revisit the same contact ticks; eviction drops the
+        least-recently gathered block, not the whole cache)."""
         col = self._delay_cols.get(tidx)
-        if col is None:
-            t = float(self.grid_t[tidx])
-            sp = stations_eci(self.stations, t)               # (n_st, 3)
-            kp = self.constellation.positions_eci(t)          # (S, 3)
-            dist = np.linalg.norm(sp[:, None, :] - kp[None, :, :], axis=-1)
-            col = self._delays_from_dist(dist).astype(np.float32)
-            if len(self._delay_cols) >= 4096:
-                self._delay_cols.clear()
-            self._delay_cols[tidx] = col
+        if col is not None:
+            self._delay_cols.move_to_end(tidx)
+            return col
+        t = float(self.grid_t[tidx])
+        sp = stations_eci(self.stations, t)               # (n_st, 3)
+        kp = self.constellation.positions_eci(t)          # (S, 3)
+        dist = np.linalg.norm(sp[:, None, :] - kp[None, :, :], axis=-1)
+        col = self._delays_from_dist(dist).astype(np.float32)
+        self._delay_cols[tidx] = col
+        if len(self._delay_cols) > max(1, self.cfg.delay_column_cache):
+            self._delay_cols.popitem(last=False)
         return col
 
     def shl_delay(self, st_i: int, sat_i: int, t_s: float) -> float:
@@ -325,6 +367,11 @@ class RoundEngine:
             - self.stations[1].position_eci(0.0)))
         return model_transfer_delay_s(self.model_bits // 32, d, "fso")
 
+    def ring_delay(self) -> float:
+        """Inter-station dissemination ring (down + up every IHL hop)
+        paid between rounds — one definition for every strategy."""
+        return 2 * (len(self.stations) - 1) * self.ihl_delay()
+
     def train_time(self) -> float:
         return self.cfg.local_steps * self.cfg.compute_s_per_step
 
@@ -347,6 +394,141 @@ class RoundEngine:
         tt = t_s + np.maximum(0, j - i0) * step
         ok = (j < T) & (tt <= self.horizon_s)
         return np.where(ok, tt, np.nan)
+
+    # ----------------------------------------------- routing subsystem
+    def contact_graph(self, t_s: float = 0.0) -> ContactGraph:
+        """Time-expanded ISL contact graph covering ``t_s`` (route cache).
+
+        When the whole-horizon ``(S, S, T)`` structures fit
+        ``SimConfig.isl_grid_max_bytes`` one graph is built and reused
+        for every query; past the budget, half-overlapping windows of
+        the grid are compiled on demand and memoized (up to 4), so
+        mega-constellation shells route over sliding windows instead of
+        materializing the full edge table.
+        """
+        T = len(self.grid_t)
+        S = self.n_sats
+        per_step = S * S * 3           # 1-byte LoS + 2-byte int16 table
+        # Windows stay under the int16 sentinel so the edge table never
+        # silently widens to int32 (which would bust the byte budget).
+        W = int(max(32, min(T, np.iinfo(np.int16).max - 1,
+                            self.cfg.isl_grid_max_bytes
+                            // max(1, per_step))))
+        if W >= T:
+            i0 = 0
+        else:
+            half = max(1, W // 2)
+            i0 = min((self._tidx(t_s) // half) * half, T - W)
+        graph = self._contact_graphs.get(i0)
+        if graph is None:
+            sl = slice(i0, min(i0 + W, T))
+            graph = build_contact_graph(
+                self.constellation, self.grid_t[sl],
+                self.model_bits // 32,
+                grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
+                positions=self._sat_pos[:, sl])
+            self._contact_graphs[i0] = graph
+            if len(self._contact_graphs) > 4:
+                self._contact_graphs.popitem(last=False)
+        else:
+            self._contact_graphs.move_to_end(i0)
+        return graph
+
+    def station_upload_end(self, sat_idx, t_s) -> np.ndarray:
+        """Earliest completion of an upload from satellite(s) ready at
+        ``t_s``: wait for the satellite's next station contact, then one
+        SHL transfer through the first station that sees it. Inputs
+        broadcast; returns absolute end times (inf when no contact
+        remains before the horizon) — the batched per-segment pricing
+        behind the routed strategies' exit decisions.
+        """
+        step = self.cfg.time_step_s
+        T = self.sat_next.shape[1]
+        sat, t = np.broadcast_arrays(np.asarray(sat_idx, dtype=np.int64),
+                                     np.asarray(t_s, dtype=np.float64))
+        fin = np.isfinite(t) & (t <= self.horizon_s)
+        ti = np.where(fin, t, 0.0)
+        i0 = np.minimum((ti / step).astype(np.int64), T - 1)
+        j = self.sat_next[sat, i0]
+        tt = ti + np.maximum(0, j - i0) * step
+        ok = fin & (j < T) & (tt <= self.horizon_s)
+        jj = np.minimum(j, T - 1)
+        owner = self.vis[:, sat, jj].argmax(axis=0)
+        shl = self.shl_delays(owner, sat, jj)
+        return np.where(ok, tt + shl, np.inf)
+
+    def orbit_subgraph(self, l: int, t_s: float = 0.0) -> ContactGraph:
+        """Induced intra-plane contact graph of orbit ``l`` covering
+        ``t_s`` (cached): the ring members plus every intra-plane chord
+        with line of sight — the substrate of sink-election routing."""
+        g = self.contact_graph(t_s)
+        key = (l, float(g.grid_t[0]))
+        sub = self._orbit_graphs.get(key)
+        if sub is None:
+            sub = subgraph(g, self.constellation._orbit_table[l])
+            self._orbit_graphs[key] = sub
+            if len(self._orbit_graphs) > 4 * self.cfg.num_orbits:
+                self._orbit_graphs.popitem(last=False)
+        else:
+            self._orbit_graphs.move_to_end(key)
+        return sub
+
+    def elect_sinks(self, t_s: float,
+                    orbits: Optional[Any] = None) -> SinkElection:
+        """Per-orbit sink election at ``t_s`` (memoized — the sink cache).
+
+        Scores every orbit member by Eq.-14-chain-weighted *intra-plane*
+        routed arrival delay (the orbit's induced contact subgraph,
+        :meth:`orbit_subgraph`) plus its station exit cost — priced by
+        :meth:`station_upload_end` at each candidate's own delivery
+        time, so a contact window that closes while the chain is still
+        folding never wins an election — and elects the argmin; see
+        :func:`repro.orbits.routing.elect_sinks`. ``orbits`` restricts
+        the election (e.g. one orbit of an async cycle); default all.
+        Returned ``sinks`` are global satellite ids.
+        """
+        cfg = self.cfg
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        sel = tuple(range(L)) if orbits is None \
+            else tuple(int(x) for x in orbits)
+        key = (sel, round(float(t_s), 6))
+        el = self._sink_cache.get(key)
+        if el is not None:
+            self._sink_cache.move_to_end(key)
+            return el
+        table = self.constellation._orbit_table
+        members = table[list(sel)]                             # (L', k)
+        sizes = self.sizes.reshape(L, k)
+        locals_ = np.arange(k)[None, :]
+
+        def exit_cost(loc, ready, l):
+            # contact wait + SHL from the candidate's own delivery time
+            # (the delivery delta itself is already in the chain-weighted
+            # arrival-delay term of the score).
+            end = self.station_upload_end(table[l][loc], ready)
+            return np.where(np.isfinite(ready), end - ready, np.inf)
+
+        parts = [
+            elect_sinks(
+                self.orbit_subgraph(l, t_s), locals_, sizes[l][None],
+                float(t_s),
+                lambda loc, ready, l=l: exit_cost(loc, ready, l),
+                cfg.partial_mode, lam=self._onehot_lam[l][None])
+            for l in sel
+        ]
+        el = SinkElection(
+            sinks=np.array([members[i, p.sink_slots[0]]
+                            for i, p in enumerate(parts)]),
+            sink_slots=np.concatenate([p.sink_slots for p in parts]),
+            scores=np.concatenate([p.scores for p in parts]),
+            lam=np.concatenate([p.lam for p in parts]),
+            delivery=np.concatenate([p.delivery for p in parts]),
+            all_scores=np.concatenate([p.all_scores for p in parts]),
+        )
+        self._sink_cache[key] = el
+        if len(self._sink_cache) > 1024:
+            self._sink_cache.popitem(last=False)
+        return el
 
     # ------------------------------------------------- training/agg ops
     def train_all(self, params: Any):

@@ -1,11 +1,16 @@
 """Timeline strategy registry.
 
 Importing this package registers the built-in FL-Satcom methods
-(fedhap | fedisl | fedisl_ideal | fedsat | fedspace). Each strategy is a
-small class supplying only scheduling + weighting rules; the shared
-round loop, physics, and aggregation live in ``repro.sim.engine``.
+(fedhap | fedisl | fedisl_ideal | fedsat | fedspace) and the routed
+sink-scheduling family built on the ISL contact-graph router
+(fedsink | fedhap_async | fedhap_buffered). Each strategy is a small
+class supplying only scheduling + weighting rules; the shared round
+loop, physics, routing caches, and aggregation live in
+``repro.sim.engine``; the async/buffered family shares the
+:class:`CycleStrategy` event machinery from ``base``.
 """
 from repro.sim.strategies.base import (
+    CycleStrategy,
     RunState,
     Strategy,
     available_strategies,
@@ -14,14 +19,19 @@ from repro.sim.strategies.base import (
 )
 # Built-in strategies self-register on import.
 from repro.sim.strategies.fedhap import FedHap, RoundPlan
+from repro.sim.strategies.fedhap_async import FedHapAsync
+from repro.sim.strategies.fedhap_buffered import FedHapBuffered
 from repro.sim.strategies.fedisl import FedIsl
 from repro.sim.strategies.fedsat import FedSat
+from repro.sim.strategies.fedsink import FedSink, SinkRoundPlan
 from repro.sim.strategies.fedspace import FedSpace
 
-STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace")
+STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace",
+              "fedsink", "fedhap_async", "fedhap_buffered")
 
 __all__ = [
-    "RunState", "Strategy", "available_strategies", "get_strategy",
-    "register_strategy", "STRATEGIES",
-    "FedHap", "RoundPlan", "FedIsl", "FedSat", "FedSpace",
+    "CycleStrategy", "RunState", "Strategy", "available_strategies",
+    "get_strategy", "register_strategy", "STRATEGIES",
+    "FedHap", "RoundPlan", "FedHapAsync", "FedHapBuffered", "FedIsl",
+    "FedSat", "FedSink", "FedSpace", "SinkRoundPlan",
 ]

@@ -21,7 +21,9 @@ registration + config away — no simulator edits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Type
+from typing import Any, Callable, Dict, Optional, Tuple, Type
+
+import numpy as np
 
 _REGISTRY: Dict[str, Type["Strategy"]] = {}
 
@@ -82,3 +84,73 @@ class Strategy:
         (e.g. no remaining contact before the horizon).
         """
         raise NotImplementedError
+
+
+class CycleStrategy(Strategy):
+    """Shared event machinery for the routed asynchronous FedHAP family.
+
+    Every orbit runs independent train -> route -> upload *cycles*
+    against the engine's contact-graph router: a cycle starts from the
+    global model the orbit last saw, trains all members, folds them
+    along the Eq.-14 intra-plane chain, routes the folded model to a
+    station (how is the subclass's :meth:`schedule_cycle`), and lands at
+    an absolute arrival time. ``step`` pops the earliest inflight
+    arrival, materializes the training it priced (one vmapped burst),
+    hands the orbit model to the subclass's :meth:`fold` (immediate
+    async fold vs buffer-then-flush), and relaunches the orbit's next
+    cycle from the new global — a pure event loop, no wall of
+    ``time_step_s`` ticks.
+    """
+
+    def schedule_cycle(self, eng: Any, l: int,
+                       t_s: float) -> Optional[Tuple[float, np.ndarray]]:
+        """Price one cycle of orbit ``l`` starting at ``t_s``.
+
+        Returns ``(arrival_s, lam)`` — the absolute time the orbit's
+        routed model lands on a station and the ``(K,)`` Eq.-14 chain
+        weights of its members — or None when the orbit can no longer
+        deliver before the horizon. Pure scheduling: no training, so
+        the wallclock benches can drive it directly.
+        """
+        raise NotImplementedError
+
+    def fold(self, eng: Any, s: RunState, l: int, orbit_model: Any,
+             base_tag: int) -> None:
+        """Absorb one arrived orbit model into the global state.
+
+        ``base_tag`` is the aggregation tag the cycle trained against
+        (staleness = current tag - base_tag). Must bump ``s.events`` /
+        ``scratch['tag']`` and eval when a new global is produced.
+        """
+        raise NotImplementedError
+
+    def _launch(self, eng: Any, s: RunState, l: int) -> None:
+        sc = s.scratch
+        nxt = self.schedule_cycle(eng, l, s.t)
+        if nxt is None or nxt[0] > eng.horizon_s:
+            sc["inflight"].pop(l, None)
+            return
+        sc["inflight"][l] = nxt
+        sc["cycle_base"][l] = s.params
+        sc["cycle_tag"][l] = sc["tag"]
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        sc = s.scratch
+        if "inflight" not in sc:
+            sc.update(inflight={}, cycle_base={}, cycle_tag={}, tag=0)
+            for l in range(eng.cfg.num_orbits):
+                self._launch(eng, s, l)
+        if not sc["inflight"]:
+            s.t = eng.horizon_s + 1.0
+            return False
+        l = min(sc["inflight"], key=lambda x: sc["inflight"][x][0])
+        arrival, lam = sc["inflight"].pop(l)
+        k = eng.cfg.sats_per_orbit
+        clients = list(range(l * k, (l + 1) * k))
+        stacked = eng.trainer.stack([sc["cycle_base"][l]] * k)
+        stacked, _ = eng.trainer.train_clients(
+            stacked, eng.fd, clients, eng.cfg.local_steps, eng.rng)
+        s.t = float(arrival)
+        self.fold(eng, s, l, eng.combine(stacked, lam), sc["cycle_tag"][l])
+        self._launch(eng, s, l)
+        return True

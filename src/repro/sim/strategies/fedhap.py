@@ -83,8 +83,7 @@ class FedHap(Strategy):
         stacked = eng.train_all(s.params)
         s.params = eng.combine(stacked, plan.mu)
         # inter-HAP ring (down + up) before the next round can start.
-        ring = 2 * (len(eng.stations) - 1) * eng.ihl_delay()
-        s.t = plan.round_end + ring
+        s.t = plan.round_end + eng.ring_delay()
         s.events += 1
         if (s.events - 1) % cfg.eval_every_rounds == 0:
             eng.eval_and_record(s)

@@ -1,0 +1,63 @@
+"""Asynchronous FedHAP over routed sinks: HAPs fold whatever routed
+orbit models have arrived, staleness-discounted.
+
+Each orbit cycles independently (no round barrier): train from the
+global it last saw, fold the members along the Eq.-14 intra-plane chain
+into the orbit's elected sink (:meth:`RoundEngine.elect_sinks`), and
+upload at the sink's next station contact
+(:meth:`RoundEngine.station_upload_end`). The station folds each
+arrival immediately:
+
+    global <- (1 - rho) * global + rho * orbit_model,
+    rho = (m_orbit / m_total) * staleness_discount(tag - base_tag)
+
+with the discount from the closed-form weights engine
+(:func:`repro.core.weights.staleness_discount`) — orbits that cycled
+against an old global are down-weighted, exactly the FedSpace rule
+applied on top of FedHAP's Eq. 14 chain weights. Event-driven: the
+simulator jumps between arrivals, no fixed-tick stepping.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.core.treeops import tree_add, tree_scale
+from repro.core.weights import staleness_discount
+from repro.sim.strategies.base import (
+    CycleStrategy,
+    RunState,
+    register_strategy,
+)
+
+
+@register_strategy("fedhap_async")
+class FedHapAsync(CycleStrategy):
+
+    def schedule_cycle(self, eng: Any, l: int,
+                       t_s: float) -> Optional[Tuple[float, np.ndarray]]:
+        t0 = t_s + eng.train_time()
+        el = eng.elect_sinks(t0, orbits=(l,))
+        if not np.isfinite(el.scores[0]):
+            return None
+        end = float(eng.station_upload_end(int(el.sinks[0]),
+                                           float(el.delivery[0])))
+        if not np.isfinite(end):
+            return None
+        return end, el.lam[0]
+
+    def fold(self, eng: Any, s: RunState, l: int, orbit_model: Any,
+             base_tag: int) -> None:
+        cfg = eng.cfg
+        sc = s.scratch
+        sl = eng.orbit_slice(l)
+        rho = float(eng.sizes[sl].sum() / eng.sizes.sum()
+                    * staleness_discount(sc["tag"] - base_tag,
+                                         cfg.staleness_power))
+        s.params = tree_add(tree_scale(s.params, 1.0 - rho),
+                            tree_scale(orbit_model, rho))
+        sc["tag"] += 1
+        s.events += 1
+        if (s.events - 1) % cfg.eval_every_rounds == 0:
+            eng.eval_and_record(s)

@@ -1,0 +1,77 @@
+"""Buffered FedHAP over routed multi-hop paths: buffer-then-flush
+dissemination through whichever satellite can exit first.
+
+Like ``fedhap_async``, every orbit cycles independently and folds its
+members along the Eq.-14 chain into its elected sink — but the folded
+model then rides the contact-graph router *cross-plane*
+(:func:`repro.orbits.routing.earliest_arrival` from the sink to every
+satellite) and exits through the satellite with the earliest completed
+station upload, not necessarily one of the orbit's own. The station
+buffers arrivals and flushes once ``buffer_fraction`` of the orbits have
+reported:
+
+    global <- (1 - sum rho_j) * global + sum_j rho_j * model_j,
+    rho_j = (m_orbit_j / m_total) * staleness_discount(tag - base_tag_j)
+
+one einsum over the stacked buffered models, with the shared discount
+from :func:`repro.core.weights.staleness_discount`.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.core.treeops import tree_add, tree_scale
+from repro.core.weights import staleness_discount
+from repro.orbits.routing import earliest_arrival
+from repro.sim.strategies.base import (
+    CycleStrategy,
+    RunState,
+    register_strategy,
+)
+
+
+@register_strategy("fedhap_buffered")
+class FedHapBuffered(CycleStrategy):
+
+    def schedule_cycle(self, eng: Any, l: int,
+                       t_s: float) -> Optional[Tuple[float, np.ndarray]]:
+        t0 = t_s + eng.train_time()
+        el = eng.elect_sinks(t0, orbits=(l,))
+        if not np.isfinite(el.scores[0]):
+            return None
+        # Route the folded model from the sink to EVERY satellite and
+        # exit through the earliest completed station upload (the sink
+        # itself is a zero-hop candidate: arr[sink] == delivery).
+        graph = eng.contact_graph(float(el.delivery[0]))
+        arr = earliest_arrival(graph, [int(el.sinks[0])],
+                               float(el.delivery[0]))[0]
+        end = float(np.min(eng.station_upload_end(
+            np.arange(eng.n_sats), arr)))
+        if not np.isfinite(end):
+            return None
+        return end, el.lam[0]
+
+    def fold(self, eng: Any, s: RunState, l: int, orbit_model: Any,
+             base_tag: int) -> None:
+        cfg = eng.cfg
+        sc = s.scratch
+        buf = sc.setdefault("buffer", [])
+        buf.append((l, orbit_model, base_tag))
+        if len(buf) < max(1, int(cfg.buffer_fraction * cfg.num_orbits)):
+            return
+        total = eng.sizes.sum()
+        rhos = np.array([
+            eng.sizes[eng.orbit_slice(j)].sum() / total
+            * staleness_discount(sc["tag"] - btag, cfg.staleness_power)
+            for j, _, btag in buf])
+        stacked = eng.trainer.stack([m for _, m, _ in buf])
+        keep = max(0.0, 1.0 - float(rhos.sum()))
+        s.params = tree_add(tree_scale(s.params, keep),
+                            eng.combine(stacked, rhos))
+        buf.clear()
+        sc["tag"] += 1
+        s.events += 1
+        if (s.events - 1) % cfg.eval_every_rounds == 0:
+            eng.eval_and_record(s)

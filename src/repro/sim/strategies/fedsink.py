@@ -1,0 +1,75 @@
+"""FedSink (Elmahallawy & Luo, arXiv:2302.13447, on FedHAP physics):
+intra-plane model propagation to a per-orbit *elected sink* satellite
+which does the SHL exchange with the parameter stations.
+
+Scheduling: each round, every orbit elects the member that minimizes the
+aggregate reachability score — the Eq.-14-chain-weighted routed arrival
+delay of its members' models plus the candidate's station exit cost
+(wait for its next contact + SHL transfer); see
+:meth:`repro.sim.engine.RoundEngine.elect_sinks` /
+:func:`repro.orbits.routing.elect_sinks`. All members train, their
+models fold along the closed-form intra-plane chain into the sink, and
+the round completes when the slowest orbit's sink finishes its upload.
+Weighting: Eq. 14-16 with exactly one visible satellite (the sink) per
+ring — the same closed-form engine as fedhap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.weights import mu_weights
+from repro.sim.strategies.base import RunState, Strategy, register_strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class SinkRoundPlan:
+    """Scheduling + weighting decision of one fedsink round (driven
+    standalone by the --sim-wallclock benches, like fedhap's RoundPlan)."""
+    sinks: np.ndarray         # (L,) elected sink satellite ids
+    mu: np.ndarray            # (n_sats,) Eq. 14-16 global weights
+    round_end: float          # when the last sink's upload completes [s]
+
+
+@register_strategy("fedsink")
+class FedSink(Strategy):
+
+    def plan_round(self, eng: Any, t: float) -> SinkRoundPlan | None:
+        """Vectorized sink election + pricing for the round at ``t``.
+
+        Returns None when some orbit has no candidate that can exit
+        before the horizon (the run ends). Elections, routed chain
+        delays, and station exits are all batched engine/router queries.
+        """
+        cfg = eng.cfg
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        t0 = t + eng.train_time()
+        el = eng.elect_sinks(t0)
+        if not np.isfinite(el.scores).all():
+            return None
+        upload_end = eng.station_upload_end(el.sinks, el.delivery)
+        if not np.isfinite(upload_end).all():
+            return None
+        visible = np.zeros((L, k), dtype=bool)
+        visible[np.arange(L), el.sink_slots] = True
+        mu = mu_weights(visible.reshape(-1), eng.sizes, k,
+                        cfg.partial_mode, cfg.orbit_weighting)
+        return SinkRoundPlan(el.sinks, np.asarray(mu),
+                             max(t, float(upload_end.max())))
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        cfg = eng.cfg
+        plan = self.plan_round(eng, s.t)
+        if plan is None:
+            s.t = eng.horizon_s + 1.0
+            return False
+        stacked = eng.train_all(s.params)
+        s.params = eng.combine(stacked, plan.mu)
+        # inter-HAP ring (down + up) before the next round can start.
+        s.t = plan.round_end + eng.ring_delay()
+        s.events += 1
+        if (s.events - 1) % cfg.eval_every_rounds == 0:
+            eng.eval_and_record(s)
+        return True

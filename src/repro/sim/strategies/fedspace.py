@@ -7,6 +7,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.treeops import tree_add, tree_sub
+from repro.core.weights import staleness_discount
 from repro.sim.strategies.base import RunState, Strategy, register_strategy
 
 
@@ -48,7 +49,7 @@ class FedSpace(Strategy):
             total = eng.sizes.sum()
             wts = np.array([
                 eng.sizes[sat] / total
-                / (1.0 + sc["tag"] - btag) ** cfg.staleness_power
+                * staleness_discount(sc["tag"] - btag, cfg.staleness_power)
                 for sat, _, btag in sc["buffer"]])
             stacked = eng.trainer.stack([d for _, d, _ in sc["buffer"]])
             s.params = tree_add(s.params, eng.combine(stacked, wts))

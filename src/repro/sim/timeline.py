@@ -1,24 +1,44 @@
-"""Backwards-compatible import surface for the timeline simulator.
+"""DEPRECATED shim — the simulator is ``repro.sim.engine`` + the
+strategy registry.
 
 The 450-line strategy monolith that used to live here was rebuilt as a
-vectorized engine + strategy registry:
+vectorized engine + strategy registry, and ``repro.sim`` is the single
+simulation entry point:
 
 - ``repro.sim.engine`` — :class:`RoundEngine` (= ``SatcomSimulator``):
-  world state, next-contact tables, einsum aggregation, the run loop;
+  world state, contact/route/sink caches, einsum aggregation, the run
+  loop; ``SimConfig.strategy`` resolves through the registry.
 - ``repro.sim.strategies`` — registered per-method scheduling/weighting
-  rules (fedhap | fedisl | fedisl_ideal | fedsat | fedspace).
+  rules (fedhap | fedisl | fedisl_ideal | fedsat | fedspace | fedsink |
+  fedhap_async | fedhap_buffered).
 
-Existing imports (``from repro.sim.timeline import SatcomSimulator``)
-keep working; new code should import from ``repro.sim`` or the modules
-above directly.
+Every attribute access through this module emits a
+:class:`DeprecationWarning` and forwards to the engine (PEP 562), so
+``from repro.sim.timeline import SatcomSimulator`` keeps returning the
+exact registry-backed engine class — results are bit-identical to
+importing from ``repro.sim`` directly (covered by
+``tests/test_timeline_shim.py``).
 """
-from repro.sim.engine import (
-    RoundEngine,
-    SatcomSimulator,
-    SimConfig,
-    SimResult,
-    _make_stations,
-)
+from __future__ import annotations
 
-__all__ = ["RoundEngine", "SatcomSimulator", "SimConfig", "SimResult",
-           "_make_stations"]
+import warnings
+
+_FORWARDED = ("RoundEngine", "SatcomSimulator", "SimConfig", "SimResult",
+              "_make_stations")
+
+__all__ = list(_FORWARDED)
+
+
+def __getattr__(name: str):
+    if name in _FORWARDED:
+        warnings.warn(
+            "repro.sim.timeline is deprecated; import from repro.sim "
+            "(the RoundEngine + strategy-registry entry point) instead",
+            DeprecationWarning, stacklevel=2)
+        from repro.sim import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

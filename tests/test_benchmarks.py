@@ -38,7 +38,8 @@ class TestSetups:
 
     def test_strategies_registry(self):
         assert set(STRATEGIES) == {"fedhap", "fedisl", "fedisl_ideal",
-                                   "fedsat", "fedspace"}
+                                   "fedsat", "fedspace", "fedsink",
+                                   "fedhap_async", "fedhap_buffered"}
 
 
 class TestGeometryBench:
@@ -55,14 +56,28 @@ class TestGeometryBench:
         assert row["eager_table"]
         assert row["lookup_us"] > 0 and row["reference_us"] > 0
 
+    def test_routing_build_row_well_formed(self):
+        row = bench_geometry.bench_routing_build(
+            (2, 3), horizon_h=1.0, step_s=120.0)
+        assert row["n_sats"] == 6 and row["T"] > 0
+        assert row["build_s"] > 0 and row["table_mb"] >= 0
+        assert 0.0 <= row["isl_density"] <= 1.0
+
+    def test_earliest_arrival_row_checks_reference(self):
+        row = bench_geometry.bench_earliest_arrival(
+            (2, 3), horizon_h=1.0, step_s=120.0, n_ref_sources=2)
+        assert row["batched_s"] > 0 and row["reference_s"] > 0
+        assert row["reachable_frac"] > 0
+
     @pytest.mark.slow
     def test_smoke_tier_writes_full_schema(self, tmp_path):
         doc = bench_geometry.run(smoke=True)
-        for key in ("schema", "grid_build", "delay_table", "sweep",
-                    "sim_wallclock"):
+        for key in ("schema", "grid_build", "delay_table", "routing",
+                    "sweep", "sim_wallclock"):
             assert key in doc
         assert all(r["speedup"] > 0 for r in doc["grid_build"])
         assert all(r["rounds_per_sec"] > 0 for r in doc["sweep"])
+        assert doc["routing"]["async_sweep"]["async_rps"] > 0
 
 
 class TestRendering:

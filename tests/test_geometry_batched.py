@@ -144,8 +144,61 @@ class TestBatchedMask:
         pos = con.positions_eci(ts)
         for a in range(len(con)):
             for b in range(len(con)):
+                if a == b:
+                    continue           # the grid zeroes self-links
                 np.testing.assert_array_equal(
                     grid[a, b], sat_sat_visible(pos[a], pos[b]))
+
+
+class TestIslMask:
+    """ISL LoS grid invariants on the paper 5x8 shell (routing substrate)."""
+
+    @pytest.fixture(scope="class")
+    def shell(self):
+        con = WalkerConstellation(5, 8)
+        ts = np.arange(0, 6 * 3600.0, 120.0)
+        return con, ts, sat_sat_visibility_mask(con, ts)
+
+    def test_symmetry(self, shell):
+        _, _, grid = shell
+        np.testing.assert_array_equal(grid, grid.transpose(1, 0, 2))
+
+    def test_zero_diagonal(self, shell):
+        con, _, grid = shell
+        S = len(con)
+        assert not grid[np.arange(S), np.arange(S)].any()
+
+    def test_agrees_with_pairwise(self, shell):
+        con, ts, grid = shell
+        pos = con.positions_eci(ts)
+        rng = np.random.default_rng(0)
+        for _ in range(32):
+            a, b = rng.choice(len(con), size=2, replace=False)
+            np.testing.assert_array_equal(
+                grid[a, b], sat_sat_visible(pos[a], pos[b]),
+                err_msg=f"pair ({a}, {b})")
+
+    def test_occluded_cross_plane_pair_exists(self, shell):
+        """Some cross-plane pair must be Earth-blocked at some time —
+        and the grid must agree with the pairwise predicate there."""
+        con, ts, grid = shell
+        orbit = np.arange(len(con)) // con.sats_per_orbit
+        cross = orbit[:, None] != orbit[None, :]
+        occluded = cross[:, :, None] & ~grid
+        assert occluded.any(), "no occluded cross-plane pair on 5x8"
+        a, b, t = (int(x[0]) for x in np.nonzero(occluded))
+        pos = con.positions_eci(ts[t])
+        assert not bool(sat_sat_visible(pos[a], pos[b]))
+        assert orbit[a] != orbit[b]
+
+    def test_intra_plane_neighbors_always_visible(self, shell):
+        """Adjacent slots of one ring at 2000 km never lose LoS — the
+        assumption behind the paper's intra-orbit ISL dissemination."""
+        con, _, grid = shell
+        k = con.sats_per_orbit
+        for s in range(k):
+            a, b = con._orbit_table[0, s], con._orbit_table[0, (s + 1) % k]
+            assert grid[a, b].all()
 
 
 @pytest.mark.slow
@@ -213,6 +266,32 @@ class TestDelayTables:
         t = float(gs_eng.grid_t[10])
         assert gs_eng.shl_delay(0, 0, t) == pytest.approx(
             gs_eng.shl_delay_reference(0, 0, t), rel=1e-5)
+
+    def test_lru_cache_equivalent_under_eviction(self, eng):
+        """Lazy columns through a tiny LRU (constant churn) still match
+        the eager table on every query, revisits included."""
+        cfg = SimConfig(stations="two_hap", max_rounds=1, **QUICK)
+        lazy = SatcomSimulator(dataclasses.replace(
+            cfg, delay_table_max_bytes=0, delay_column_cache=3))
+        assert lazy.shl_table is None
+        cols = [0, 5, 9, 14, 5, 0, 20, 9, 0]      # revisits + evictions
+        for tidx in cols:
+            got = lazy.shl_delays(np.arange(2)[:, None],
+                                  np.arange(lazy.n_sats)[None, :], tidx)
+            want = eng.shl_delays(np.arange(2)[:, None],
+                                  np.arange(eng.n_sats)[None, :], tidx)
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert len(lazy._delay_cols) == 3
+
+    def test_lru_evicts_least_recently_used(self):
+        cfg = SimConfig(stations="two_hap", max_rounds=1, **QUICK)
+        lazy = SatcomSimulator(dataclasses.replace(
+            cfg, delay_table_max_bytes=0, delay_column_cache=3))
+        for tidx in (0, 1, 2):
+            lazy._delay_column(tidx)
+        lazy._delay_column(0)                     # refresh 0
+        lazy._delay_column(3)                     # evicts 1, not 0
+        assert set(lazy._delay_cols) == {0, 2, 3}
 
 
 class TestBatchedSampling:

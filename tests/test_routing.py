@@ -1,0 +1,230 @@
+"""ISL routing subsystem: batched contact-graph search vs the per-edge
+Python reference, routed paths, subgraphs, and sink election."""
+import numpy as np
+import pytest
+
+from repro.orbits import WalkerConstellation
+from repro.orbits.routing import (
+    build_contact_graph,
+    earliest_arrival,
+    earliest_arrival_reference,
+    elect_sinks,
+    extract_path,
+    onehot_chain_weights,
+    predecessors,
+    subgraph,
+)
+
+N_PARAMS = 100_000
+
+
+@pytest.fixture(scope="module")
+def paper_graph():
+    con = WalkerConstellation(5, 8)
+    ts = np.arange(0, 3 * 3600, 60.0)
+    return con, build_contact_graph(con, ts, N_PARAMS)
+
+
+def _inf_to_big(a):
+    return np.where(np.isfinite(a), a, 1e18)
+
+
+class TestContactGraph:
+    def test_edge_table_shape_and_sentinel(self, paper_graph):
+        con, g = paper_graph
+        S, T = len(con), g.n_steps
+        assert g.edge_next.shape == (S, S, T)
+        assert g.isl_vis.shape == (S, S, T)
+        # at every up-edge slice the table points at the slice itself
+        a, b, t = np.nonzero(g.isl_vis)
+        assert (g.edge_next[a, b, t] == t).all()
+        # diagonal edges never exist (no self-links)
+        assert (g.edge_next[np.arange(S), np.arange(S)] == T).all()
+
+    def test_time_index_ceil_semantics(self, paper_graph):
+        _, g = paper_graph
+        assert int(g.time_index(0.0)) == 0
+        assert int(g.time_index(59.9)) == 1
+        assert int(g.time_index(60.0)) == 1
+        assert int(g.time_index(1e12)) == g.n_steps
+        assert int(g.time_index(np.inf)) == g.n_steps
+
+    def test_edge_delay_matches_manual(self, paper_graph):
+        from repro.orbits import model_transfer_delay_s
+        _, g = paper_graph
+        d = np.linalg.norm(g.positions[3, 17] - g.positions[29, 17])
+        assert float(g.edge_delay(3, 29, 17)) == pytest.approx(
+            model_transfer_delay_s(N_PARAMS, d, "fso"))
+
+
+class TestEarliestArrival:
+    def test_matches_per_edge_reference(self, paper_graph):
+        """Acceptance: routed earliest-arrival allclose to the per-edge
+        Python label-correcting reference on the paper 5x8 shell."""
+        _, g = paper_graph
+        t0 = 123.0
+        srcs = [0, 13, 27, 39]
+        arr = earliest_arrival(g, srcs, t0)
+        for i, s in enumerate(srcs):
+            ref = earliest_arrival_reference(g, s, t0)
+            np.testing.assert_allclose(_inf_to_big(arr[i]),
+                                       _inf_to_big(ref),
+                                       rtol=1e-9, atol=1e-6)
+
+    def test_source_and_lower_bound(self, paper_graph):
+        _, g = paper_graph
+        arr = earliest_arrival(g, [7], 500.0)[0]
+        assert arr[7] == 500.0
+        finite = arr[np.isfinite(arr)]
+        assert (finite >= 500.0).all()
+        assert len(finite) > 1          # something is reachable over ISL
+
+    def test_multi_source_equals_per_source(self, paper_graph):
+        _, g = paper_graph
+        srcs = [2, 11, 35]
+        batched = earliest_arrival(g, srcs, 0.0)
+        for i, s in enumerate(srcs):
+            np.testing.assert_array_equal(
+                batched[i], earliest_arrival(g, [s], 0.0)[0])
+
+    def test_paths_replay_to_table_arrival(self, paper_graph):
+        """Extracted multi-hop paths, replayed edge by edge with the
+        graph's own departure rule, land exactly on the table time."""
+        _, g = paper_graph
+        src, t0 = 0, 123.0
+        arr = earliest_arrival(g, [src], t0)
+        pred = predecessors(g, [src], arr)
+        checked = 0
+        for dst in range(g.n_sats):
+            if not np.isfinite(arr[0][dst]):
+                continue
+            path = extract_path(pred[0], src, dst)
+            assert path and path[0] == src and path[-1] == dst
+            t = t0
+            for a, b in zip(path, path[1:]):
+                j = int(g.edge_next[a, b, int(g.time_index(t))])
+                assert j < g.n_steps
+                t = float(g.grid_t[j]) + float(g.edge_delay(a, b, j))
+            assert t == pytest.approx(float(arr[0][dst]), abs=1e-6)
+            checked += 1
+        assert checked >= g.n_sats // 2
+
+    def test_subgraph_restricts_routing(self, paper_graph):
+        """The induced intra-plane graph routes only through members:
+        its arrivals are >= the full graph's and bounded by ring hops."""
+        con, g = paper_graph
+        members = con._orbit_table[2]
+        sub = subgraph(g, members)
+        assert sub.edge_next.shape == (8, 8, g.n_steps)
+        arr_sub = earliest_arrival(sub, [0], 0.0)[0]       # local ids
+        arr_full = earliest_arrival(g, [int(members[0])], 0.0)[0]
+        assert np.isfinite(arr_sub).all()   # ring neighbors always see
+        assert (arr_sub >= arr_full[members] - 1e-9).all()
+
+
+class TestSinkElection:
+    def test_exit_cost_drives_election(self, paper_graph):
+        con, g = paper_graph
+        members = con._orbit_table
+        sizes = np.ones((5, 8))
+        exit_cost = np.full((5, 8), 1e4)
+        exit_cost[:, 5] = 1.0        # slot 5 is nearly free to exit
+        el = elect_sinks(g, members, sizes, 0.0, exit_cost)
+        assert (el.sink_slots == 5).all()
+        assert (el.sinks == members[:, 5]).all()
+
+    def test_lam_is_onehot_chain(self, paper_graph):
+        con, g = paper_graph
+        members = con._orbit_table
+        rng = np.random.default_rng(0)
+        sizes = rng.uniform(1.0, 3.0, (5, 8))
+        el = elect_sinks(g, members, sizes, 0.0, np.zeros((5, 8)))
+        lam_all = onehot_chain_weights(sizes)
+        np.testing.assert_allclose(el.lam.sum(axis=1), 1.0)
+        for l in range(5):
+            np.testing.assert_allclose(
+                el.lam[l], lam_all[l, el.sink_slots[l]])
+
+    def test_infinite_exit_costs_propagate(self, paper_graph):
+        con, g = paper_graph
+        members = con._orbit_table
+        exit_cost = np.full((5, 8), np.inf)
+        el = elect_sinks(g, members, np.ones((5, 8)), 0.0, exit_cost)
+        assert not np.isfinite(el.scores).any()
+
+    def test_delivery_covers_all_members(self, paper_graph):
+        con, g = paper_graph
+        members = con._orbit_table
+        el = elect_sinks(g, members, np.ones((5, 8)), 50.0,
+                         np.zeros((5, 8)))
+        arr = earliest_arrival(g, members.reshape(-1), 50.0)
+        arr = arr.reshape(5, 8, -1)
+        for l in range(5):
+            worst = max(float(arr[l, m, el.sinks[l]]) for m in range(8))
+            assert el.delivery[l] == pytest.approx(worst)
+
+
+class TestEngineRoutingCaches:
+    @pytest.fixture(scope="class")
+    def eng(self):
+        from repro.sim import SatcomSimulator, SimConfig
+        return SatcomSimulator(SimConfig(
+            stations="two_hap", model_kind="mlp", num_samples=2000,
+            eval_samples=400, horizon_h=12.0, time_step_s=60.0,
+            max_rounds=1))
+
+    def test_contact_graph_cached_and_covering(self, eng):
+        g1 = eng.contact_graph(0.0)
+        g2 = eng.contact_graph(100.0)
+        assert g1 is g2                  # paper scale: one horizon graph
+        assert g1.n_steps == len(eng.grid_t)
+
+    def test_windowed_graphs_past_budget(self, eng):
+        import dataclasses
+        from repro.sim import SatcomSimulator
+        small = SatcomSimulator(dataclasses.replace(
+            eng.cfg, isl_grid_max_bytes=40 * 40 * 6 * 64))
+        g0 = small.contact_graph(0.0)
+        assert g0.n_steps < len(small.grid_t)
+        g_late = small.contact_graph(float(small.grid_t[-1]))
+        assert g_late.grid_t[-1] == small.grid_t[-1]
+        # window contents match the full-horizon graph slice
+        full = eng.contact_graph(0.0)
+        i0 = int(np.searchsorted(eng.grid_t, g_late.grid_t[0]))
+        np.testing.assert_array_equal(
+            g_late.isl_vis,
+            full.isl_vis[:, :, i0:i0 + g_late.n_steps])
+
+    def test_station_upload_end_manual(self, eng):
+        """Batched exit pricing == next-contact scan + shl_delay."""
+        step = eng.cfg.time_step_s
+        for sat in (0, 17, 33):
+            t = 700.0
+            got = float(eng.station_upload_end(sat, t))
+            i = int(t / step)
+            while not eng.any_vis[sat, i]:
+                i += 1
+            tt = t + (i - int(t / step)) * step
+            st = int(eng.vis[:, sat, i].argmax())
+            want = tt + eng.shl_delay(st, sat, float(eng.grid_t[i]))
+            assert got == pytest.approx(want)
+
+    def test_station_upload_end_inf_past_horizon(self, eng):
+        assert not np.isfinite(
+            float(eng.station_upload_end(0, eng.horizon_s + 1.0)))
+        assert not np.isfinite(float(eng.station_upload_end(0, np.inf)))
+
+    def test_elect_sinks_memoized_and_global_ids(self, eng):
+        el1 = eng.elect_sinks(60.0)
+        el2 = eng.elect_sinks(60.0)
+        assert el1 is el2
+        members = eng.constellation._orbit_table
+        for l in range(eng.cfg.num_orbits):
+            assert el1.sinks[l] in members[l]
+            assert el1.sinks[l] == members[l, el1.sink_slots[l]]
+
+    def test_elect_single_orbit_matches_full(self, eng):
+        full = eng.elect_sinks(120.0)
+        one = eng.elect_sinks(120.0, orbits=(3,))
+        assert one.sinks[0] == full.sinks[3]
+        np.testing.assert_allclose(one.scores[0], full.scores[3])
