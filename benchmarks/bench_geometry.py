@@ -17,6 +17,11 @@ Four sections, all recorded to ``BENCH_sim.json`` (schema documented in
   earliest-arrival search vs the per-edge Python reference (checked
   allclose), and the scheduling-only throughput of the routed
   ``fedhap_async`` event loop vs fedhap rounds.
+- **sim_fused** — the fused plan-ahead driver vs the per-round /
+  per-event reference loop (local SGD excluded) for fedhap,
+  fedhap_async, and fedhap_buffered on the paper 5x8 shell and a 10x20
+  shell: K planned rounds (or cycle events) batched into schedule
+  tensors and executed as one device dispatch.
 - **sweep** — ``haps:N`` / ``grid:RxC`` station scenarios crossed with
   large Walker shells: records grid-build time and scheduler-only
   FedHAP rounds/sec (local SGD excluded, as in ``sim_wallclock``).
@@ -227,6 +232,46 @@ def bench_routing(smoke: bool) -> dict:
     return doc
 
 
+def bench_sim_fused(smoke: bool) -> list[dict]:
+    """Fused plan-ahead blocks vs the per-round/per-event reference for
+    the FedHAP family (local SGD excluded, as in ``sim_wallclock``)."""
+    from benchmarks.sim_wallclock import (
+        run_wallclock_cycles,
+        run_wallclock_fused,
+    )
+    if smoke:
+        shells = [((5, 8), 20, 20)]
+    else:
+        shells = [((5, 8), 100, 100), ((10, 20), 100, 40)]
+    out = []
+    for shell, rounds, cycle_rounds in shells:
+        # Long horizon: fedhap rounds take hours of sim time each.
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        num_orbits=shell[0], sats_per_orbit=shell[1],
+                        horizon_h=600.0, time_step_s=60.0, **_SIM_LITE)
+        eng = RoundEngine(cfg)
+        rows = [("fedhap", run_wallclock_fused(
+            cfg, rounds=rounds, eng=eng), "per_round_rps")]
+        for strat in ("fedhap_async", "fedhap_buffered"):
+            rows.append((strat, run_wallclock_cycles(
+                cfg, rounds=cycle_rounds, eng=eng, strategy=strat),
+                "per_event_rps"))
+        for strat, res, ref_key in rows:
+            row = {
+                "strategy": strat, "shell": f"{shell[0]}x{shell[1]}",
+                "stations": "two_hap", "rounds": res["rounds"],
+                "per_round_rps": round(res[ref_key], 2),
+                "fused_rps": round(res["fused_rps"], 2),
+                "speedup": round(res["speedup"], 2),
+            }
+            out.append(row)
+            print(f"  sim_fused[{strat} x {row['shell']}]: fused "
+                  f"{row['fused_rps']:.1f} vs per-round "
+                  f"{row['per_round_rps']:.1f} rounds/s "
+                  f"({row['speedup']:.2f}x)", flush=True)
+    return out
+
+
 def bench_sweep(scenarios, horizon_h: float, step_s: float,
                 rounds: int = 10) -> list[dict]:
     """Mega-constellation sweep: grid build + scheduler rounds/sec."""
@@ -288,6 +333,8 @@ def run(smoke: bool = False, sim_wallclock: bool = False,
           f"({r['speedup']:.0f}x)", flush=True)
 
     doc["routing"] = bench_routing(smoke)
+
+    doc["sim_fused"] = bench_sim_fused(smoke)
 
     doc["sweep"] = bench_sweep(sweep_scenarios, horizon_h, step_s,
                                rounds=sweep_rounds)

@@ -1,0 +1,105 @@
+"""Perf-regression guard over ``BENCH_sim.json``.
+
+Compares a freshly measured benchmark document against the committed
+baseline and fails (exit 1) when any throughput metric present in BOTH
+documents dropped by more than the tolerance (default 30%, configurable
+via ``--tolerance`` or the ``REGRESSION_TOLERANCE`` env var). Run by
+the nightly CI job after the full ``bench_geometry`` tier.
+
+Only rate-type metrics are guarded (rounds/s, events/s, lookups are
+covered indirectly through them); absolute wall times are skipped —
+they shift with machine load, while the rates compared at 30% slack
+catch real algorithmic regressions.
+
+Usage:
+  python -m benchmarks.check_regression \\
+      --baseline BENCH_sim.baseline.json --fresh BENCH_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _rate_metrics(doc: dict) -> dict[str, float]:
+    """Flatten a BENCH_sim document into {metric key: rounds-per-sec}."""
+    out: dict[str, float] = {}
+
+    def put(key: str, val) -> None:
+        if isinstance(val, (int, float)) and val > 0:
+            out[key] = float(val)
+
+    for row in doc.get("sweep") or []:
+        put(f"sweep[{row['stations']} x {row['shell']}].rounds_per_sec",
+            row.get("rounds_per_sec"))
+    for row in doc.get("sim_fused") or []:
+        base = f"sim_fused[{row['strategy']} x {row['shell']}]"
+        put(f"{base}.per_round_rps", row.get("per_round_rps"))
+        put(f"{base}.fused_rps", row.get("fused_rps"))
+    routing = doc.get("routing") or {}
+    sweep = routing.get("async_sweep") or {}
+    if sweep:
+        put(f"routing.async_sweep[{sweep.get('shell')}].async_rps",
+            sweep.get("async_rps"))
+        put(f"routing.async_sweep[{sweep.get('shell')}].fedhap_rps",
+            sweep.get("fedhap_rps"))
+    wall = doc.get("sim_wallclock") or {}
+    if wall:
+        put("sim_wallclock.engine_rps", wall.get("engine_rps"))
+    return out
+
+
+def check(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    """Return a list of regression messages (empty = pass)."""
+    if baseline.get("smoke") != fresh.get("smoke"):
+        print("note: baseline/fresh were produced by different tiers "
+              f"(smoke={baseline.get('smoke')} vs {fresh.get('smoke')}); "
+              "comparing the shared metrics anyway", flush=True)
+    base = _rate_metrics(baseline)
+    new = _rate_metrics(fresh)
+    failures = []
+    for key in sorted(base):
+        if key not in new:
+            print(f"  skip   {key}: not measured in fresh run")
+            continue
+        floor = base[key] * (1.0 - tolerance)
+        verdict = "ok" if new[key] >= floor else "REGRESSED"
+        print(f"  {verdict:9s}{key}: {new[key]:.2f} vs baseline "
+              f"{base[key]:.2f} (floor {floor:.2f})")
+        if new[key] < floor:
+            failures.append(
+                f"{key}: {new[key]:.2f} < {floor:.2f} "
+                f"(baseline {base[key]:.2f}, tolerance {tolerance:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_sim.json to compare against")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly measured BENCH_sim.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("REGRESSION_TOLERANCE",
+                                                 0.30)),
+                    help="allowed fractional drop (default 0.30 or "
+                         "$REGRESSION_TOLERANCE)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = check(baseline, fresh, args.tolerance)
+    if failures:
+        print("\nperf regression detected:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("\nno perf regressions beyond tolerance "
+          f"({args.tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

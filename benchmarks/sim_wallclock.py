@@ -7,8 +7,15 @@ the pre-registry monolith's per-round machinery: O(T) Python ``while``
 scans over the visibility grid per orbit, per-satellite ``unstack`` and
 Python tree-op folds, ``full_aggregate`` over per-orbit partial lists.
 
-Used by ``bench_table2.py --sim-wallclock`` and
-``bench_fig3.py --sim-wallclock``.
+``run_wallclock_fused`` / ``run_wallclock_cycles`` measure the fused
+plan-ahead driver against the per-round/per-event reference on the same
+exclusion of local SGD: K planned rounds (or cycle events) become
+schedule tensors executed as ONE device dispatch, vs one eager
+fold + blocking sync per round.
+
+Used by ``bench_table2.py --sim-wallclock``,
+``bench_fig3.py --sim-wallclock``, and the ``sim_fused`` section of
+``bench_geometry.py``.
 """
 from __future__ import annotations
 
@@ -17,11 +24,12 @@ import time
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.aggregation import full_aggregate, segment_upload_weights
 from repro.core.treeops import tree_add, tree_scale
 from repro.sim import SatcomSimulator, SimConfig
-from repro.sim.strategies import FedHap, FedHapAsync
+from repro.sim.strategies import FedHap, FedHapAsync, get_strategy
 
 
 def _legacy_first_contacts(eng, t):
@@ -179,6 +187,158 @@ def run_wallclock_async(cfg: SimConfig, rounds: int = 100,
     n = drive()
     dt = time.perf_counter() - t0
     return {"rounds": n, "async_rps": n / dt}
+
+
+def run_wallclock_fused(cfg: SimConfig, rounds: int = 100,
+                        eng: SatcomSimulator | None = None,
+                        strategy: str | None = None,
+                        block: int | None = None) -> dict:
+    """Fused plan-ahead driver vs the per-round loop for one of the
+    synchronous round strategies (fedhap | fedsink | fedisl).
+
+    Both paths exclude local SGD (as in :func:`run_wallclock`) and
+    execute the same K planned folds of the same stacked params: the
+    per-round path plans, folds eagerly, and syncs every round (exactly
+    :func:`run_wallclock`'s engine drive); the fused path chains K
+    plans into a (K, S) schedule tensor and applies them as ONE batched
+    device dispatch (:meth:`FusedExecutor.fold_block` — each stacked
+    leaf is read once per block instead of once per round).
+
+    Returns ``{"rounds", "per_round_rps", "fused_rps", "speedup"}``.
+    """
+    eng = eng if eng is not None else SatcomSimulator(cfg)
+    strat = get_strategy(strategy or cfg.strategy)()
+    params = eng.trainer.init(cfg.seed)
+    stacked = eng.trainer.stack([params] * eng.n_sats)
+    jax.block_until_ready(stacked)
+    ex = eng.executor
+    block = block or rounds
+
+    def drive_per_round():
+        t, n = 0.0, 0
+        while n < rounds:
+            plan = strat.plan_round(eng, t)
+            if plan is None:
+                break
+            jax.block_until_ready(eng.combine(stacked, plan.mu))
+            t = plan.t_next
+            n += 1
+        return n
+
+    def drive_fused():
+        t, n = 0.0, 0
+        while n < rounds:
+            mus = []
+            while len(mus) < min(block, rounds - n):
+                plan = strat.plan_round(eng, t)
+                if plan is None:
+                    break
+                mus.append(plan.mu)
+                t = plan.t_next
+            if not mus:
+                break
+            jax.block_until_ready(ex.fold_block(stacked, np.asarray(mus)))
+            n += len(mus)
+        return n
+
+    drive_per_round()             # warm both paths before timing either
+    drive_fused()
+    t0 = time.perf_counter()
+    n_p = drive_per_round()
+    dt_p = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n_f = drive_fused()
+    dt_f = time.perf_counter() - t0
+    assert n_f == n_p, (n_f, n_p)
+    return {"rounds": n_p, "per_round_rps": n_p / dt_p,
+            "fused_rps": n_f / dt_f,
+            "speedup": (n_f / dt_f) / (n_p / dt_p)}
+
+
+def run_wallclock_cycles(cfg: SimConfig, rounds: int = 100,
+                         eng: SatcomSimulator | None = None,
+                         strategy: str | None = None,
+                         block: int = 32) -> dict:
+    """Fused event blocks vs the per-event loop for the routed cycle
+    family (fedhap_async | fedhap_buffered).
+
+    Both paths run the strategy's own pure-numpy event plan (cycle
+    pricing via ``schedule_cycle``, staleness folds via ``plan_fold``)
+    on fixed stacked member params (local SGD excluded). The per-event
+    path executes each fold with the reference's eager tree ops and a
+    blocking sync per arrival; the fused path batches ``block`` planned
+    events into tensors and dispatches one
+    :meth:`FusedExecutor.cycle_fold_block` scan.
+
+    Returns ``{"rounds", "per_event_rps", "fused_rps", "speedup"}``
+    (``rounds`` counts arrivals, as in :func:`run_wallclock_async`).
+    """
+    eng = eng if eng is not None else SatcomSimulator(cfg)
+    strat = get_strategy(strategy or cfg.strategy)()
+    k = cfg.sats_per_orbit
+    B = strat.buffer_slots(eng)
+    params = eng.trainer.init(cfg.seed)
+    stacked_k = eng.trainer.stack([params] * k)
+    jax.block_until_ready(stacked_k)
+    ex = eng.executor
+    zero = jax.tree.map(jnp.zeros_like, params)
+
+    def drive_per_event():
+        st = strat.init_plan_state(eng, 0.0)
+        g, buf, n = params, [], 0
+        while n < rounds:
+            events = strat.plan_events(eng, st, 1)
+            if not events:
+                break
+            e = events[0]
+            buf.append(eng.combine(stacked_k, e["lam"]))
+            if e["flush"]:
+                rhos = e["rhos"][:len(buf)]
+                g = tree_add(tree_scale(g, float(e["keep"])),
+                             eng.combine(eng.trainer.stack(buf), rhos))
+                buf.clear()
+            jax.block_until_ready((g, buf))
+            n += 1
+        return n
+
+    def drive_fused():
+        st = strat.init_plan_state(eng, 0.0)
+        g = params
+        buf = ex.broadcast_rows(zero, B)
+        n = 0
+        while n < rounds:
+            events = strat.plan_events(eng, st, min(block, rounds - n))
+            if not events:
+                break
+            m = len(events)
+            tensors = {
+                "l": np.array([e["l"] for e in events]),
+                "lam": np.stack([e["lam"] for e in events]),
+                "rhos": np.stack([e["rhos"] for e in events]),
+                "keep": np.array([e["keep"] for e in events]),
+                "slot": np.array([e["slot"] for e in events]),
+                "flush": np.array([e["flush"] for e in events]),
+                "valid": np.ones(m, dtype=bool),
+            }
+            g, buf = ex.cycle_fold_block(g, buf, stacked_k, tensors)
+            jax.block_until_ready(g)
+            n += m
+        return n
+
+    drive_per_event()          # warm jit/dispatch + the contact graphs
+    drive_fused()
+    eng._sink_cache.clear()    # time steady-state pricing, not memo hits
+    t0 = time.perf_counter()
+    n_p = drive_per_event()
+    dt_p = time.perf_counter() - t0
+    eng._sink_cache.clear()
+    t0 = time.perf_counter()
+    n_f = drive_fused()
+    dt_f = time.perf_counter() - t0
+    assert n_f == n_p, (n_f, n_p)
+    return {"rounds": n_p, "per_event_rps": n_p / dt_p,
+            "fused_rps": n_f / dt_f,
+            "speedup": (n_f / dt_f) / (n_p / dt_p)}
 
 
 def report(tag: str, cfg: SimConfig, rounds: int = 25) -> dict:

@@ -43,5 +43,26 @@ def tree_combine(stacked: Any, weights: Any) -> Any:
         lambda x: jnp.einsum("s,s...->...", w, x), stacked)
 
 
+def tree_broadcast(tree: Any, n: int) -> Any:
+    """Broadcast every leaf to a stacked ``(n, ...)`` replica view.
+
+    The jit-resident replacement for ``stack([tree] * n)``: inside a
+    jitted program the broadcast is a zero-copy view until the first
+    replica-divergent write, so the global model never round-trips
+    through n host-side copies."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def tree_row(stacked: Any, i: Any) -> Any:
+    """Row ``i`` of a stacked tree; ``i`` may be a traced index."""
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def tree_set_row(stacked: Any, i: Any, row: Any) -> Any:
+    """Functional row update of a stacked tree (``i`` may be traced)."""
+    return jax.tree.map(lambda x, r: x.at[i].set(r), stacked, row)
+
+
 __all__ = ["tree_scale", "tree_add", "tree_sub", "tree_weighted_sum",
-           "tree_combine"]
+           "tree_combine", "tree_broadcast", "tree_row", "tree_set_row"]

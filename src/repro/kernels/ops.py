@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.treeops import tree_combine
 from repro.kernels.fedagg import fedagg
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_wkv import rwkv6_wkv
@@ -36,7 +37,7 @@ def fedagg_tree(params_stacked, weights):
     s = leaves[0].shape[0]
     flat = jnp.concatenate(
         [l.reshape(s, -1).astype(jnp.float32) for l in leaves], axis=1)
-    agg = fedagg_op(flat, weights.astype(jnp.float32))
+    agg = fedagg_op(flat, jnp.asarray(weights, jnp.float32))
     out = []
     ofs = 0
     for l in leaves:
@@ -44,6 +45,25 @@ def fedagg_tree(params_stacked, weights):
         out.append(agg[ofs:ofs + n].reshape(l.shape[1:]).astype(l.dtype))
         ofs += n
     return jax.tree.unflatten(treedef, out)
+
+
+def fold_stacked_tree(params_stacked, weights, use_pallas: bool | None = None):
+    """The simulator's weighted model fold: Σ_s weights[s]·stacked[s].
+
+    Backend dispatch for the round megastep (``repro.sim.executor``): on
+    accelerators the fold streams the flattened model through the fused
+    Pallas kernel (:func:`fedagg_tree` — one HBM pass, weights resident
+    in VMEM); on CPU the per-leaf einsum reference
+    (:func:`repro.core.treeops.tree_combine`) is both the fast path and
+    the interpret-mode equivalence oracle (Pallas interpret mode is
+    ~100x slower than the einsum and only exercised by the tests).
+    Safe to call inside jit; ``use_pallas`` overrides the backend pick.
+    """
+    if use_pallas is None:
+        use_pallas = not _on_cpu()
+    if use_pallas:
+        return fedagg_tree(params_stacked, weights)
+    return tree_combine(params_stacked, weights)
 
 
 @functools.partial(jax.jit,

@@ -15,7 +15,18 @@ from repro.sim.strategies import (
 from repro.sim.trainer import LocalTrainer
 
 __all__ = [
-    "LocalTrainer", "RoundEngine", "SatcomSimulator", "SimConfig",
-    "SimResult", "STRATEGIES", "Strategy", "available_strategies",
-    "get_strategy", "register_strategy",
+    "FusedExecutor", "LocalTrainer", "RoundEngine", "SatcomSimulator",
+    "SimConfig", "SimResult", "STRATEGIES", "Strategy",
+    "available_strategies", "get_strategy", "register_strategy",
 ]
+
+
+def __getattr__(name: str):
+    # Lazy re-export: the executor pulls in the Pallas kernel stack,
+    # which the per-round reference path never needs (RoundEngine also
+    # defers this import to first use).
+    if name == "FusedExecutor":
+        from repro.sim.executor import FusedExecutor
+        return FusedExecutor
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -97,6 +97,11 @@ class SimConfig:
     iid: bool = False
     partial_mode: str = "paper"   # Eq. 14 gamma mode
     orbit_weighting: str = "paper"
+    # execution: fused plan-ahead blocks (device-resident model, one
+    # donated lax.scan dispatch per `plan_block` planned rounds/events)
+    # vs the per-round reference path (host-synced every round)
+    fused: bool = True
+    plan_block: int = 8
     # constellation (paper §IV-A)
     num_orbits: int = 5
     sats_per_orbit: int = 8
@@ -263,10 +268,36 @@ class RoundEngine:
                 self.constellation.orbit_members(0)[1])
         self.isl_dist = self.constellation.isl_distance_m(a, b, 0.0)
 
+        # Fused execute backend (built on first use; see `executor`).
+        self._executor = None
+
     # ------------------------------------------------------------ helpers
     @property
     def horizon_s(self) -> float:
         return self.cfg.horizon_h * 3600.0
+
+    @property
+    def executor(self):
+        """Lazily-built fused execute backend (``repro.sim.executor``):
+        device-resident dataset/eval set + the donated jitted block
+        programs the plan-ahead drivers dispatch to."""
+        if self._executor is None:
+            from repro.sim.executor import FusedExecutor
+            self._executor = FusedExecutor(
+                self.trainer, self.fd, self.eval_images, self.eval_labels)
+        return self._executor
+
+    def tidx(self, t_s) -> np.ndarray:
+        """Batched grid-time index: floor(t/step) clamped to the grid.
+
+        Accepts scalars or arrays of times [s]; returns int64 indices of
+        the same shape — the shared lookup behind every per-orbit /
+        per-segment visibility and delay-table gather. Scalar callers on
+        the per-query hot path use :meth:`_tidx` (no array round-trip).
+        """
+        t = np.asarray(t_s, dtype=np.float64)
+        return np.minimum((t / self.cfg.time_step_s).astype(np.int64),
+                          self.vis.shape[2] - 1)
 
     def _tidx(self, t_s: float) -> int:
         return min(int(t_s / self.cfg.time_step_s), self.vis.shape[2] - 1)
@@ -448,7 +479,7 @@ class RoundEngine:
                                      np.asarray(t_s, dtype=np.float64))
         fin = np.isfinite(t) & (t <= self.horizon_s)
         ti = np.where(fin, t, 0.0)
-        i0 = np.minimum((ti / step).astype(np.int64), T - 1)
+        i0 = self.tidx(ti)
         j = self.sat_next[sat, i0]
         tt = ti + np.maximum(0, j - i0) * step
         ok = fin & (j < T) & (tt <= self.horizon_s)
@@ -550,16 +581,28 @@ class RoundEngine:
         s.history.append((s.t / 3600.0, s.events, s.acc))
 
     # -------------------------------------------------------------- run
-    def run(self, strategy: Union[str, Strategy, None] = None) -> SimResult:
-        """Drive the configured (or given) strategy to completion."""
+    def run(self, strategy: Union[str, Strategy, None] = None,
+            fused: Optional[bool] = None) -> SimResult:
+        """Drive the configured (or given) strategy to completion.
+
+        ``fused`` selects the execution path (default
+        ``SimConfig.fused``): the plan-ahead block driver — K planned
+        rounds/events per donated device dispatch, host only between
+        blocks — or the per-round reference loop (one ``step`` per
+        round, host-synced; the equivalence oracle for the fused path).
+        """
         strat = strategy if isinstance(strategy, Strategy) else \
             get_strategy(strategy or self.cfg.strategy)()
         cfg = self.cfg
+        use_fused = cfg.fused if fused is None else fused
         s = RunState(params=self.trainer.init(cfg.seed))
-        while (s.events < cfg.max_rounds and s.t <= self.horizon_s
-               and s.acc < cfg.target_accuracy):
-            if not strat.step(self, s):
-                break
+        if use_fused:
+            strat.run_fused(self, s)
+        else:
+            while (s.events < cfg.max_rounds and s.t <= self.horizon_s
+                   and s.acc < cfg.target_accuracy):
+                if not strat.step(self, s):
+                    break
         return SimResult(s.history, s.acc, len(s.history), s.t / 3600.0)
 
 

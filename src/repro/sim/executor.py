@@ -1,0 +1,449 @@
+"""Fused on-device execution for the timeline simulator.
+
+The per-round reference path (``Strategy.step``) pays per-round Python:
+``stack([params] * n_sats)`` host copies, a host mini-batch gather and
+upload, one dispatch per train / fold / eval, and a blocking sync every
+round. :class:`FusedExecutor` is the jitted execute phase of the
+plan/execute split: strategies plan in pure numpy (contact times,
+Eq. 14-16 weights, staleness discounts — no rng, no params), batch K
+planned rounds into schedule tensors, and execute them as ONE donated
+dispatch:
+
+- the dataset and eval set live on device; per-round mini-batches are
+  gathered *inside* the jitted program from host-sampled index tensors
+  (identical rng stream to the reference path);
+- the global model stays resident and is broadcast to the satellite
+  replicas inside jit (:func:`repro.core.treeops.tree_broadcast` — a
+  view, not ``n_sats`` host copies);
+- train -> weighted fold -> eval fuse into one ``round_megastep`` whose
+  fold runs through the Pallas ``fedagg`` kernel on accelerators and
+  the einsum reference (:func:`repro.core.treeops.tree_combine`) on CPU
+  (:func:`repro.kernels.ops.fold_stacked_tree`);
+- a ``lax.scan`` chains K megasteps per dispatch (``run_block`` for the
+  synchronous round family, ``cycle_block`` for the routed event
+  family), returning to the host only between blocks for history
+  recording and termination checks.
+
+Accuracies come back as one stacked transfer per block; rounds the plan
+marked invalid (padding) or non-eval are skipped via ``lax.cond``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.treeops import (
+    tree_broadcast,
+    tree_row,
+    tree_set_row,
+)
+from repro.kernels.ops import fold_stacked_tree
+
+
+def tree_combine_many(stacked: Any, weight_rows: Any) -> Any:
+    """K weighted folds of one stacked tree in a single batched einsum.
+
+    ``weight_rows`` is ``(K, S)``; returns a tree of ``(K, ...)`` leaves
+    with row k equal to ``tree_combine(stacked, weight_rows[k])``. Each
+    leaf is read ONCE for all K folds — the schedule-tensor form of K
+    independent planned aggregations (weight sweeps, the wallclock
+    bench), as opposed to the sequential fold inside ``run_block``
+    where round k+1's input depends on round k's output.
+    """
+    w = jnp.asarray(weight_rows, jnp.float32)
+    return jax.tree.map(lambda x: jnp.einsum("ks,s...->k...", w, x), stacked)
+
+
+class FusedExecutor:
+    """Device-resident data + jitted block programs for one engine."""
+
+    def __init__(self, trainer: Any, fd: Any, eval_images: np.ndarray,
+                 eval_labels: np.ndarray, *, eval_chunk: int = 1024,
+                 use_pallas: Optional[bool] = None):
+        self.trainer = trainer
+        self._x = jnp.asarray(fd.images)
+        self._y = jnp.asarray(np.asarray(fd.labels, np.int32))
+        self.use_pallas = use_pallas
+        self._jit = {}          # (kind, *shape key) -> compiled program
+
+        # Eval set, padded to whole chunks; pad labels are -1 so they
+        # never match an argmax in [0, num_classes).
+        n = len(eval_images)
+        self._eval_n = n
+        c = max(1, min(eval_chunk, n)) if n else 1
+        pad = (-n) % c
+        ex = np.asarray(eval_images)
+        ey = np.asarray(eval_labels, np.int32)
+        if pad:
+            ex = np.concatenate(
+                [ex, np.zeros((pad,) + ex.shape[1:], ex.dtype)])
+            ey = np.concatenate([ey, np.full(pad, -1, ey.dtype)])
+        self._ex = jnp.asarray(ex.reshape(-1, c, *ex.shape[1:]))
+        self._ey = jnp.asarray(ey.reshape(-1, c))
+
+    # ------------------------------------------------------------ basics
+    def _fold(self, stacked: Any, weights: Any) -> Any:
+        return fold_stacked_tree(stacked, weights, self.use_pallas)
+
+    def _device_acc(self, params: Any) -> jax.Array:
+        """Fraction of the eval set classified correctly — the chunked
+        accuracy reduction run inside the megastep (single f32 scalar;
+        no host transfer until the block boundary)."""
+        if self._eval_n == 0:
+            return jnp.float32(0.0)
+        model = self.trainer.model
+
+        def chunk_correct(xy):
+            x, y = xy
+            pred = jnp.argmax(model.forward(params, x), axis=-1)
+            return jnp.sum((pred == y).astype(jnp.float32))
+
+        correct = jnp.sum(jax.lax.map(chunk_correct, (self._ex, self._ey)))
+        return correct / jnp.float32(self._eval_n)
+
+    def _nan_acc(self, params: Any) -> jax.Array:
+        return jnp.full((), jnp.nan, jnp.float32)
+
+    def _train(self, base: Any, idx: jax.Array, n_rep: int,
+               n_steps: int) -> Any:
+        """The megastep's train half: device gather of the sampled
+        mini-batch indices + one vmapped SGD burst over ``n_rep``
+        replicas broadcast from ``base`` inside jit."""
+        bs = self.trainer.batch_size
+        x = self._x[idx].reshape(n_rep, n_steps, bs, *self._x.shape[1:])
+        y = self._y[idx].reshape(n_rep, n_steps, bs)
+        trained, _ = jax.vmap(self.trainer.multi_step)(
+            tree_broadcast(base, n_rep), x, y)
+        return trained
+
+    def broadcast_rows(self, params: Any, n: int) -> Any:
+        """Materialized (n, ...) stacked copies of ``params`` on device
+        (per-orbit / per-satellite base-model tables)."""
+        key = ("bcast", n)
+        fn = self._jit.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p: jax.tree.map(
+                lambda x: jnp.tile(x[None], (n,) + (1,) * x.ndim), p))
+            self._jit[key] = fn
+        return fn(params)
+
+    # -------------------------------------------- synchronous round family
+    def run_block(self, params: Any, idx: np.ndarray, mu: np.ndarray,
+                  do_eval: np.ndarray, valid: np.ndarray):
+        """Execute K planned rounds in one donated dispatch.
+
+        ``idx``: (K, S, n_steps*bs) sampled dataset indices; ``mu``:
+        (K, S) planned global weights; ``do_eval``/``valid``: (K,)
+        flags. Returns ``(params, accs)`` — the device-resident global
+        after the last valid round and a (K,) host array of accuracies
+        (NaN where not evaluated): ONE transfer per block.
+        """
+        K, S, need = idx.shape
+        n_steps = need // self.trainer.batch_size
+        key = ("round", K, S, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def block(params, idx, mu, do_eval, valid):
+                def body(p, inp):
+                    idx_r, mu_r, ev, va = inp
+
+                    def megastep(p):
+                        trained = self._train(p, idx_r, S, n_steps)
+                        return self._fold(trained, mu_r)
+
+                    p = jax.lax.cond(va, megastep, lambda q: q, p)
+                    acc = jax.lax.cond(ev & va, self._device_acc,
+                                       self._nan_acc, p)
+                    return p, acc
+
+                return jax.lax.scan(body, params,
+                                    (idx, mu, do_eval, valid))
+
+            fn = jax.jit(block, donate_argnums=0)
+            self._jit[key] = fn
+        params, accs = fn(params, jnp.asarray(idx, jnp.int32),
+                          jnp.asarray(mu, jnp.float32),
+                          jnp.asarray(do_eval), jnp.asarray(valid))
+        return params, np.asarray(accs)
+
+    def fold_block(self, stacked: Any, weight_rows: np.ndarray) -> Any:
+        """K planned folds of a fixed stacked tree as one dispatch (the
+        schedule-tensor batched aggregation; see tree_combine_many)."""
+        key = ("fold_block",)
+        fn = self._jit.get(key)
+        if fn is None:
+            fn = jax.jit(tree_combine_many)
+            self._jit[key] = fn
+        return fn(stacked, jnp.asarray(weight_rows, jnp.float32))
+
+    # ------------------------------------------------- routed event family
+    def cycle_block(self, params: Any, bases: Any, buf: Any,
+                    ev: dict[str, np.ndarray]):
+        """Execute K planned cycle events in one donated dispatch.
+
+        Carries ``(global, per-orbit cycle bases, staleness buffer)``
+        through a ``lax.scan``; each event trains orbit ``l``'s members
+        from the base the cycle launched against, folds them along the
+        planned Eq.-14 chain weights, writes the orbit model into its
+        buffer slot, and — on flush events — applies the planned
+        staleness-discounted fold ``keep*g + rhos @ buffer``. Event
+        tensors (all leading dim K): ``l`` int, ``idx`` (K, k, need),
+        ``lam`` (K, k), ``rhos`` (K, B), ``keep``, ``slot`` int,
+        ``flush``, ``do_eval``, ``valid``. Returns
+        ``(params, bases, buf, accs)`` with accs transferred once.
+        """
+        K, k, need = ev["idx"].shape
+        B = ev["rhos"].shape[1]
+        n_steps = need // self.trainer.batch_size
+        key = ("cycle", K, k, B, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def block(params, bases, buf, l, idx, lam, rhos, keep, slot,
+                      flush, do_eval, valid):
+                def body(carry, inp):
+                    g, bases, buf = carry
+                    (l_e, idx_e, lam_e, rhos_e, keep_e, slot_e, fl, evf,
+                     va) = inp
+
+                    def event(args):
+                        g, bases, buf = args
+                        base = tree_row(bases, l_e)
+                        trained = self._train(base, idx_e, k, n_steps)
+                        orbit_model = self._fold(trained, lam_e)
+                        buf = tree_set_row(buf, slot_e, orbit_model)
+
+                        def do_flush(g):
+                            return jax.tree.map(
+                                lambda gg, bb: keep_e * gg + jnp.einsum(
+                                    "s,s...->...", rhos_e, bb),
+                                g, buf)
+
+                        g = jax.lax.cond(fl, do_flush, lambda q: q, g)
+                        bases = tree_set_row(bases, l_e, g)
+                        return g, bases, buf
+
+                    g, bases, buf = jax.lax.cond(
+                        va, event, lambda a: a, (g, bases, buf))
+                    acc = jax.lax.cond(evf & va, self._device_acc,
+                                       self._nan_acc, g)
+                    return (g, bases, buf), acc
+
+                (g, bases, buf), accs = jax.lax.scan(
+                    body, (params, bases, buf),
+                    (l, idx, lam, rhos, keep, slot, flush, do_eval,
+                     valid))
+                return g, bases, buf, accs
+
+            fn = jax.jit(block, donate_argnums=(0, 1, 2))
+            self._jit[key] = fn
+        g, bases, buf, accs = fn(
+            params, bases, buf,
+            jnp.asarray(ev["l"], jnp.int32),
+            jnp.asarray(ev["idx"], jnp.int32),
+            jnp.asarray(ev["lam"], jnp.float32),
+            jnp.asarray(ev["rhos"], jnp.float32),
+            jnp.asarray(ev["keep"], jnp.float32),
+            jnp.asarray(ev["slot"], jnp.int32),
+            jnp.asarray(ev["flush"]),
+            jnp.asarray(ev["do_eval"]),
+            jnp.asarray(ev["valid"]))
+        return g, bases, buf, np.asarray(accs)
+
+    def cycle_fold_block(self, params: Any, buf: Any, stacked_k: Any,
+                         ev: dict[str, np.ndarray]):
+        """Scheduling-bench variant of :meth:`cycle_block`: identical
+        per-event fold/buffer/flush arithmetic, but the orbit model
+        folds a FIXED stacked member tree instead of freshly trained
+        replicas (local SGD excluded, as in ``benchmarks.sim_wallclock``).
+        Returns ``(params, buf)``; no eval."""
+        K = len(ev["l"])
+        B = ev["rhos"].shape[1]
+        key = ("cycle_fold", K, B)
+        fn = self._jit.get(key)
+        if fn is None:
+            def block(params, buf, stacked_k, lam, rhos, keep, slot,
+                      flush, valid):
+                def body(carry, inp):
+                    g, buf = carry
+                    lam_e, rhos_e, keep_e, slot_e, fl, va = inp
+
+                    def event(args):
+                        g, buf = args
+                        orbit_model = self._fold(stacked_k, lam_e)
+                        buf = tree_set_row(buf, slot_e, orbit_model)
+
+                        def do_flush(g):
+                            return jax.tree.map(
+                                lambda gg, bb: keep_e * gg + jnp.einsum(
+                                    "s,s...->...", rhos_e, bb),
+                                g, buf)
+
+                        g = jax.lax.cond(fl, do_flush, lambda q: q, g)
+                        return g, buf
+
+                    g, buf = jax.lax.cond(va, event, lambda a: a,
+                                          (g, buf))
+                    return (g, buf), None
+
+                (g, buf), _ = jax.lax.scan(
+                    body, (params, buf),
+                    (lam, rhos, keep, slot, flush, valid))
+                return g, buf
+
+            # No donation: the wallclock benches re-drive from the same
+            # initial params when timing warm vs steady-state.
+            fn = jax.jit(block)
+            self._jit[key] = fn
+        return fn(params, buf, stacked_k,
+                  jnp.asarray(ev["lam"], jnp.float32),
+                  jnp.asarray(ev["rhos"], jnp.float32),
+                  jnp.asarray(ev["keep"], jnp.float32),
+                  jnp.asarray(ev["slot"], jnp.int32),
+                  jnp.asarray(ev["flush"]),
+                  jnp.asarray(ev["valid"]))
+
+    # ------------------------------------------- tick-driven baselines
+    #
+    # fedsat/fedspace participant counts vary tick to tick (visited
+    # orbits, rising-edge passes), so event shapes are padded up to the
+    # next power of two before dispatch: the jit cache holds O(log S)
+    # programs instead of one per distinct count. Padding rows duplicate
+    # row 0 (same value on scatter, zero weight on folds) and carry a
+    # validity mask where a duplicate write would be wrong.
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << max(0, int(np.ceil(np.log2(max(1, n)))))
+
+    def fedsat_event(self, params: Any, bases: Any, visited: np.ndarray,
+                     idx: np.ndarray, lam_rows: np.ndarray,
+                     rhos: np.ndarray):
+        """One fused fedsat tick: train every member of every visited
+        orbit from its orbit's base in a single vmapped burst, then the
+        method's sequential per-orbit async folds — one dispatch, no
+        host tree-stacking. Returns ``(params, bases)`` on device."""
+        V = len(visited)
+        k = lam_rows.shape[1]
+        need = idx.shape[1]
+        n_steps = need // self.trainer.batch_size
+        Vp = self._pow2(V)
+        if Vp > V:
+            pad = Vp - V
+            visited = np.concatenate([visited,
+                                      np.repeat(visited[:1], pad)])
+            idx = np.concatenate([idx, np.tile(idx[:k], (pad, 1))])
+            lam_rows = np.concatenate([lam_rows,
+                                       np.zeros((pad, k))])
+            rhos = np.concatenate([rhos, np.zeros(pad)])
+        valid = np.arange(Vp) < V
+        key = ("fedsat", Vp, k, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def event(params, bases, visited, idx, lam_rows, rhos,
+                      valid):
+                base_rows = jax.tree.map(lambda b: b[visited], bases)
+                rep = jax.tree.map(
+                    lambda b: jnp.repeat(b, k, axis=0), base_rows)
+                bs = self.trainer.batch_size
+                x = self._x[idx].reshape(Vp * k, n_steps, bs,
+                                         *self._x.shape[1:])
+                y = self._y[idx].reshape(Vp * k, n_steps, bs)
+                trained, _ = jax.vmap(self.trainer.multi_step)(rep, x, y)
+
+                def orbit_fold(carry, j):
+                    g, bases = carry
+                    rows = jax.tree.map(
+                        lambda t: jax.lax.dynamic_slice_in_dim(
+                            t, j * k, k), trained)
+                    orbit_model = self._fold(rows, lam_rows[j])
+                    rho = jnp.where(valid[j], rhos[j], 0.0)
+                    g = jax.tree.map(
+                        lambda gg, oo: (1.0 - rho) * gg + rho * oo,
+                        g, orbit_model)
+                    bases = jax.lax.cond(
+                        valid[j],
+                        lambda a: tree_set_row(a[0], visited[j], a[1]),
+                        lambda a: a[0], (bases, g))
+                    return (g, bases), None
+
+                (g, bases), _ = jax.lax.scan(
+                    orbit_fold, (params, bases), jnp.arange(Vp))
+                return g, bases
+
+            fn = jax.jit(event, donate_argnums=(0, 1))
+            self._jit[key] = fn
+        return fn(params, bases, jnp.asarray(visited, jnp.int32),
+                  jnp.asarray(idx, jnp.int32),
+                  jnp.asarray(lam_rows, jnp.float32),
+                  jnp.asarray(rhos, jnp.float32), jnp.asarray(valid))
+
+    def fedspace_train(self, params: Any, bases: Any, sats: np.ndarray,
+                       idx: np.ndarray):
+        """One fused fedspace pass burst: train ``sats`` from their
+        per-satellite bases, return the stacked deltas (padded rows
+        past ``len(sats)`` are duplicates to be zero-weighted at
+        flush), and reset those base rows to the current global — one
+        dispatch. Returns ``(deltas, bases)``."""
+        N = len(sats)
+        need = idx.shape[1]
+        n_steps = need // self.trainer.batch_size
+        Np = self._pow2(N)
+        if Np > N:
+            pad = Np - N
+            # duplicate row 0: the base scatter rewrites sats[0] with
+            # the same value; the delta rows get weight 0 at flush.
+            sats = np.concatenate([sats, np.repeat(sats[:1], pad)])
+            idx = np.concatenate([idx, np.tile(idx[:1], (pad, 1))])
+        key = ("fedspace", Np, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def event(params, bases, sats, idx):
+                rows = jax.tree.map(lambda b: b[sats], bases)
+                bs = self.trainer.batch_size
+                x = self._x[idx].reshape(Np, n_steps, bs,
+                                         *self._x.shape[1:])
+                y = self._y[idx].reshape(Np, n_steps, bs)
+                trained, _ = jax.vmap(self.trainer.multi_step)(rows, x, y)
+                deltas = jax.tree.map(lambda t, r: t - r, trained, rows)
+                bases = jax.tree.map(
+                    lambda b, p: b.at[sats].set(
+                        jnp.broadcast_to(p[None], (Np,) + p.shape)),
+                    bases, params)
+                return deltas, bases
+
+            fn = jax.jit(event, donate_argnums=1)
+            self._jit[key] = fn
+        return fn(params, bases, jnp.asarray(sats, jnp.int32),
+                  jnp.asarray(idx, jnp.int32))
+
+    def fedspace_flush(self, params: Any, stacked_deltas: Any,
+                       wts: np.ndarray):
+        """Buffered flush: ``params + Σ_j wts[j]·delta_j`` fused on
+        device (the fold through the shared aggregation backend).
+        Inputs are padded to the next power-of-two row count (zero
+        weights, zero rows) so the jit cache stays O(log B)."""
+        B = len(wts)
+        Bp = self._pow2(B)
+        if Bp > B:
+            pad = Bp - B
+            wts = np.concatenate([wts, np.zeros(pad)])
+            stacked_deltas = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
+                stacked_deltas)
+        key = ("fedspace_flush", Bp)
+        fn = self._jit.get(key)
+        if fn is None:
+            def flush(params, stacked, wts):
+                upd = self._fold(stacked, wts)
+                return jax.tree.map(lambda p, u: p + u, params, upd)
+
+            fn = jax.jit(flush, donate_argnums=0)
+            self._jit[key] = fn
+        return fn(params, stacked_deltas, jnp.asarray(wts, jnp.float32))
+
+
+__all__ = ["FusedExecutor", "tree_combine_many"]

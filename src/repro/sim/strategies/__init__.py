@@ -10,7 +10,9 @@ loop, physics, routing caches, and aggregation live in
 :class:`CycleStrategy` event machinery from ``base``.
 """
 from repro.sim.strategies.base import (
+    AsyncFoldPlan,
     CycleStrategy,
+    RoundStrategy,
     RunState,
     Strategy,
     available_strategies,
@@ -30,8 +32,9 @@ STRATEGIES = ("fedhap", "fedisl", "fedisl_ideal", "fedsat", "fedspace",
               "fedsink", "fedhap_async", "fedhap_buffered")
 
 __all__ = [
-    "CycleStrategy", "RunState", "Strategy", "available_strategies",
-    "get_strategy", "register_strategy", "STRATEGIES",
+    "AsyncFoldPlan", "CycleStrategy", "RoundStrategy", "RunState",
+    "Strategy", "available_strategies", "get_strategy",
+    "register_strategy", "STRATEGIES",
     "FedHap", "RoundPlan", "FedHapAsync", "FedHapBuffered", "FedIsl",
     "FedSat", "FedSink", "FedSpace", "SinkRoundPlan",
 ]

@@ -1,10 +1,24 @@
-"""Strategy registry and base class for the timeline simulator.
+"""Strategy registry and base classes for the timeline simulator.
 
 A *strategy* supplies only the scheduling + weighting rules of one
 FL-Satcom method; the shared round loop, the physical world (batched
 visibility grids, next-contact tables, precomputed SHL-delay tables with
 the ``shl_delay``/``shl_delays`` lookup API), local training, and einsum
 aggregation all live in :class:`repro.sim.engine.RoundEngine`.
+
+Every strategy's round is split into a **pure-numpy plan phase** (contact
+times, Eq. 14-16 weights, staleness discounts — no rng, no params) and a
+**jitted execute phase**. Two drivers consume the split:
+
+- ``step`` — the per-round reference path: one plan, one training burst,
+  one fold, one eval per call (host-synced every round);
+- ``run_fused`` — the plan-ahead driver: batches K planned rounds (or
+  cycle events) into schedule tensors and executes them as ONE donated
+  ``lax.scan`` dispatch through :class:`repro.sim.executor.FusedExecutor`
+  (model resident on device, broadcast inside jit, Pallas-backed fold on
+  accelerators), returning to the host only between blocks for history
+  recording and termination checks (horizon, ``target_accuracy``,
+  ``max_rounds``).
 
 Registering a strategy:
 
@@ -23,7 +37,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple, Type
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.weights import staleness_discount
 
 _REGISTRY: Dict[str, Type["Strategy"]] = {}
 
@@ -85,6 +103,109 @@ class Strategy:
         """
         raise NotImplementedError
 
+    def run_fused(self, eng: Any, s: RunState) -> None:
+        """Drive the run through the fused execute phase.
+
+        The default falls back to the per-round reference loop;
+        strategy families with a plan-ahead block driver
+        (:class:`RoundStrategy`, :class:`CycleStrategy`) override it.
+        """
+        cfg = eng.cfg
+        while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
+               and s.acc < cfg.target_accuracy):
+            if not self.step(eng, s):
+                break
+
+
+class RoundStrategy(Strategy):
+    """Shared machinery for the synchronous whole-constellation family
+    (fedhap | fedsink | fedisl): a round plans in pure numpy
+    (:meth:`plan_round` — per-orbit report times, Eq. 14-16 weights, a
+    total round latency; no params, no rng), trains every satellite,
+    and folds with the planned ``mu``.
+
+    The plan object must expose ``mu`` (the (n_sats,) global weights)
+    and ``t_next`` (the absolute time the *next* round can start —
+    round end plus any inter-station dissemination ring). ``step``
+    executes one plan per call; ``run_fused`` chains up to
+    ``SimConfig.plan_block`` plans (param-independent, so K rounds can
+    be planned before any training happens) into schedule tensors and
+    executes them as one donated train→fold→eval ``lax.scan`` dispatch.
+    """
+
+    def plan_round(self, eng: Any, t: float) -> Optional[Any]:
+        """Pure-numpy schedule for the round starting at ``t`` (None
+        when the run can no longer proceed before the horizon)."""
+        raise NotImplementedError
+
+    def eval_due(self, cfg: Any, events: int) -> bool:
+        """Whether the round bringing the counter to ``events`` ends
+        with an accuracy eval (fedisl overrides: every round)."""
+        return (events - 1) % cfg.eval_every_rounds == 0
+
+    def step(self, eng: Any, s: RunState) -> bool:
+        plan = self.plan_round(eng, s.t)
+        if plan is None:
+            s.t = eng.horizon_s + 1.0
+            return False
+        stacked = eng.train_all(s.params)
+        s.params = eng.combine(stacked, plan.mu)
+        s.t = plan.t_next
+        s.events += 1
+        if self.eval_due(eng.cfg, s.events):
+            eng.eval_and_record(s)
+        return True
+
+    def run_fused(self, eng: Any, s: RunState) -> None:
+        cfg = eng.cfg
+        ex = eng.executor
+        K = max(1, cfg.plan_block)
+        n_sats = eng.n_sats
+        all_clients = list(range(n_sats))
+        need = cfg.local_steps * eng.trainer.batch_size
+        while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
+               and s.acc < cfg.target_accuracy):
+            # Plan ahead: chain K rounds (plans are param-independent).
+            plans, t, terminal = [], s.t, False
+            while (len(plans) < K and s.events + len(plans) < cfg.max_rounds
+                   and t <= eng.horizon_s):
+                plan = self.plan_round(eng, t)
+                if plan is None:
+                    terminal = True
+                    break
+                plans.append(plan)
+                t = plan.t_next
+            if not plans:
+                s.t = eng.horizon_s + 1.0
+                return
+            # Schedule tensors (padded to the fixed block size K) + the
+            # host-sampled batch indices (same rng stream as `step`).
+            n = len(plans)
+            idx = np.zeros((K, n_sats, need), dtype=np.int64)
+            for i in range(n):
+                idx[i] = eng.trainer.sample_client_indices(
+                    eng.fd, all_clients, cfg.local_steps, eng.rng)
+            mu = np.zeros((K, n_sats), dtype=np.float32)
+            do_eval = np.zeros(K, dtype=bool)
+            for i, plan in enumerate(plans):
+                mu[i] = plan.mu
+                do_eval[i] = self.eval_due(cfg, s.events + i + 1)
+            valid = np.arange(K) < n
+            s.params, accs = ex.run_block(s.params, idx, mu, do_eval,
+                                          valid)
+            # Host side: history + termination between blocks only.
+            for i, plan in enumerate(plans):
+                s.t = plan.t_next
+                s.events += 1
+                if do_eval[i]:
+                    s.acc = float(accs[i])
+                    s.history.append((s.t / 3600.0, s.events, s.acc))
+                    if s.acc >= cfg.target_accuracy:
+                        return
+            if terminal:
+                s.t = eng.horizon_s + 1.0
+                return
+
 
 class CycleStrategy(Strategy):
     """Shared event machinery for the routed asynchronous FedHAP family.
@@ -100,6 +221,14 @@ class CycleStrategy(Strategy):
     async fold vs buffer-then-flush), and relaunches the orbit's next
     cycle from the new global — a pure event loop, no wall of
     ``time_step_s`` ticks.
+
+    The whole event stream is param-independent (arrival times, chain
+    weights, staleness tags), so ``run_fused`` plans K events ahead —
+    per-event ``(orbit, lam, rhos, slot, flush)`` tensors from
+    :meth:`plan_fold` — and executes them as one donated ``lax.scan``
+    dispatch (:meth:`FusedExecutor.cycle_block`): per-orbit cycle bases
+    and the staleness buffer stay resident on device, with no per-event
+    host tree-stacking.
     """
 
     def schedule_cycle(self, eng: Any, l: int,
@@ -124,6 +253,20 @@ class CycleStrategy(Strategy):
         """
         raise NotImplementedError
 
+    # ------------------------------------------------- plan-phase hooks
+    def buffer_slots(self, eng: Any) -> int:
+        """Device staleness-buffer capacity (1 = immediate folds)."""
+        return 1
+
+    def plan_fold(self, eng: Any, st: dict, l: int) -> dict:
+        """Pure-numpy fold decision for one arrived cycle of orbit
+        ``l``: the staleness-discounted weights the execute phase will
+        apply. Returns ``{rhos (B,), keep, slot, flush, folds}`` and
+        advances the plan-side tag/buffer bookkeeping in ``st`` exactly
+        as :meth:`fold` advances ``scratch``."""
+        raise NotImplementedError
+
+    # ------------------------------------------------ reference driver
     def _launch(self, eng: Any, s: RunState, l: int) -> None:
         sc = s.scratch
         nxt = self.schedule_cycle(eng, l, s.t)
@@ -154,3 +297,129 @@ class CycleStrategy(Strategy):
         self.fold(eng, s, l, eng.combine(stacked, lam), sc["cycle_tag"][l])
         self._launch(eng, s, l)
         return True
+
+    # ---------------------------------------------------- fused driver
+    def _plan_launch(self, eng: Any, st: dict, l: int, t: float) -> None:
+        nxt = self.schedule_cycle(eng, l, t)
+        if nxt is None or nxt[0] > eng.horizon_s:
+            return
+        st["inflight"][l] = nxt
+        st["base_tag"][l] = st["tag"]
+
+    def init_plan_state(self, eng: Any, t: float) -> dict:
+        """Plan-side event-loop state: inflight cycle schedule plus the
+        tag/buffer bookkeeping mirrored from the reference ``scratch``.
+        Launches every orbit's first cycle from ``t``."""
+        st = {"inflight": {}, "base_tag": {}, "tag": 0, "fill": 0,
+              "meta": []}
+        for l in range(eng.cfg.num_orbits):
+            self._plan_launch(eng, st, l, t)
+        return st
+
+    def plan_events(self, eng: Any, st: dict, n_max: int,
+                    max_folds: Optional[int] = None) -> list[dict]:
+        """Plan up to ``n_max`` cycle events ahead: pop arrivals in
+        order, price each fold (:meth:`plan_fold`), and relaunch the
+        orbit's next cycle — the reference event loop minus the
+        training. Stops early once ``max_folds`` aggregation events
+        have been planned. Shared by :meth:`run_fused` and the
+        wallclock benches (``benchmarks.sim_wallclock``)."""
+        events, folds = [], 0
+        while (len(events) < n_max and st["inflight"]
+               and (max_folds is None or folds < max_folds)):
+            l = min(st["inflight"], key=lambda x: st["inflight"][x][0])
+            arrival, lam = st["inflight"].pop(l)
+            e = self.plan_fold(eng, st, l)
+            e.update(l=l, lam=np.asarray(lam, dtype=np.float64),
+                     t=float(arrival), do_eval=False)
+            folds += e["folds"]
+            events.append(e)
+            self._plan_launch(eng, st, l, float(arrival))
+        return events
+
+    def run_fused(self, eng: Any, s: RunState) -> None:
+        cfg = eng.cfg
+        ex = eng.executor
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        K = max(1, cfg.plan_block)
+        B = self.buffer_slots(eng)
+        need = cfg.local_steps * eng.trainer.batch_size
+        st = self.init_plan_state(eng, s.t)
+        bases = ex.broadcast_rows(s.params, L)
+        buf = ex.broadcast_rows(
+            jax.tree.map(jnp.zeros_like, s.params), B)
+        while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
+               and s.acc < cfg.target_accuracy):
+            if not st["inflight"]:
+                s.t = eng.horizon_s + 1.0
+                return
+            events = self.plan_events(eng, st, K,
+                                      cfg.max_rounds - s.events)
+            if not events:
+                break
+            folds = 0
+            for e in events:
+                if e["folds"]:
+                    e["do_eval"] = \
+                        (s.events + folds) % cfg.eval_every_rounds == 0
+                    folds += 1
+            # Event tensors (padded to K) + host-sampled batch indices
+            # in arrival order — the same rng stream as `step`.
+            n = len(events)
+            tensors = {
+                "l": np.zeros(K, dtype=np.int64),
+                "idx": np.zeros((K, k, need), dtype=np.int64),
+                "lam": np.zeros((K, k), dtype=np.float32),
+                "rhos": np.zeros((K, B), dtype=np.float32),
+                "keep": np.ones(K, dtype=np.float32),
+                "slot": np.zeros(K, dtype=np.int64),
+                "flush": np.zeros(K, dtype=bool),
+                "do_eval": np.zeros(K, dtype=bool),
+                "valid": np.arange(K) < n,
+            }
+            for i, e in enumerate(events):
+                sl = eng.orbit_slice(e["l"])
+                tensors["idx"][i] = eng.trainer.sample_client_indices(
+                    eng.fd, list(range(sl.start, sl.stop)),
+                    cfg.local_steps, eng.rng)
+                tensors["l"][i] = e["l"]
+                tensors["lam"][i] = e["lam"]
+                tensors["rhos"][i] = e["rhos"]
+                tensors["keep"][i] = e["keep"]
+                tensors["slot"][i] = e["slot"]
+                tensors["flush"][i] = e["flush"]
+                tensors["do_eval"][i] = e["do_eval"]
+            s.params, bases, buf, accs = ex.cycle_block(
+                s.params, bases, buf, tensors)
+            for i, e in enumerate(events):
+                s.t = e["t"]
+                if e["folds"]:
+                    s.events += 1
+                    if e["do_eval"]:
+                        s.acc = float(accs[i])
+                        s.history.append((s.t / 3600.0, s.events, s.acc))
+                        if s.acc >= cfg.target_accuracy:
+                            return
+
+
+class AsyncFoldPlan:
+    """Mixin supplying the immediate staleness-discounted fold plan
+    shared by the async family: ``rho = orbit_mass/total *
+    staleness_discount(tag - base_tag)``, folded the moment the routed
+    model arrives (buffer of one slot, always flushed)."""
+
+    def plan_fold(self, eng: Any, st: dict, l: int) -> dict:
+        cfg = eng.cfg
+        rho = float(eng.sizes[eng.orbit_slice(l)].sum() / eng.sizes.sum()
+                    * staleness_discount(st["tag"] - st["base_tag"][l],
+                                         cfg.staleness_power))
+        st["tag"] += 1
+        return dict(rhos=np.array([rho]), keep=1.0 - rho, slot=0,
+                    flush=True, folds=1)
+
+
+__all__ = [
+    "AsyncFoldPlan", "CycleStrategy", "RoundStrategy", "RunState",
+    "Strategy", "available_strategies", "get_strategy",
+    "register_strategy",
+]

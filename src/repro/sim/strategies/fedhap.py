@@ -4,7 +4,9 @@ Scheduling: the source HAP accumulates partials until every satellite is
 covered — each orbit reports at its own first visibility and the round
 completes when the LAST orbit reports (paper Alg. 1 line 18 reschedules
 until the cover is full). Weighting: closed-form Eq. 14-16 per-satellite
-weights from `repro.core.weights`.
+weights from `repro.core.weights`. Execution (train -> fold -> eval) is
+the shared :class:`RoundStrategy` machinery — per-round or the fused
+plan-ahead block driver.
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.weights import chain_stats, mu_from_chain, segment_ends
-from repro.sim.strategies.base import RunState, Strategy, register_strategy
+from repro.sim.strategies.base import RoundStrategy, register_strategy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,10 +26,11 @@ class RoundPlan:
     orbit_t: np.ndarray       # (L,) per-orbit report times [s]
     mu: np.ndarray            # (n_sats,) Eq. 14-16 global weights
     round_end: float          # when the last partial lands on the HAP [s]
+    t_next: float             # round_end + inter-HAP dissemination ring [s]
 
 
 @register_strategy("fedhap")
-class FedHap(Strategy):
+class FedHap(RoundStrategy):
 
     def plan_round(self, eng: Any, t: float) -> RoundPlan | None:
         """Vectorized schedule for the round starting at ``t``.
@@ -44,7 +47,7 @@ class FedHap(Strategy):
         L, k = cfg.num_orbits, cfg.sats_per_orbit
 
         # (L, n_st, k) station visibility of each orbit at its own time.
-        tidx = np.array([eng._tidx(float(orbit_t[l])) for l in range(L)])
+        tidx = eng.tidx(orbit_t)                  # (L,) batched lookup
         rows = eng.vis[:, :, tidx]                # (n_st, n_sat, L)
         rows = rows.reshape(rows.shape[0], L, k, L)
         vis_rows = rows[:, np.arange(L), :, np.arange(L)]    # (L, n_st, k)
@@ -72,19 +75,6 @@ class FedHap(Strategy):
         lat = train_t + counts * isl + shl
         ends = counts > 0                        # slots that end a segment
         round_end = max(t, float((orbit_t[:, None] + lat)[ends].max()))
-        return RoundPlan(orbit_t, mu, round_end)
-
-    def step(self, eng: Any, s: RunState) -> bool:
-        cfg = eng.cfg
-        plan = self.plan_round(eng, s.t)
-        if plan is None:
-            s.t = eng.horizon_s + 1.0
-            return False
-        stacked = eng.train_all(s.params)
-        s.params = eng.combine(stacked, plan.mu)
-        # inter-HAP ring (down + up) before the next round can start.
-        s.t = plan.round_end + eng.ring_delay()
-        s.events += 1
-        if (s.events - 1) % cfg.eval_every_rounds == 0:
-            eng.eval_and_record(s)
-        return True
+        # Inter-HAP ring (down + up) before the next round can start.
+        return RoundPlan(orbit_t, mu, round_end,
+                         round_end + eng.ring_delay())

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.treeops import tree_add, tree_scale
 from repro.core.weights import staleness_discount
 from repro.sim.strategies.base import (
+    AsyncFoldPlan,
     CycleStrategy,
     RunState,
     register_strategy,
@@ -33,7 +34,7 @@ from repro.sim.strategies.base import (
 
 
 @register_strategy("fedhap_async")
-class FedHapAsync(CycleStrategy):
+class FedHapAsync(AsyncFoldPlan, CycleStrategy):
 
     def schedule_cycle(self, eng: Any, l: int,
                        t_s: float) -> Optional[Tuple[float, np.ndarray]]:

@@ -35,6 +35,33 @@ from repro.sim.strategies.base import (
 @register_strategy("fedhap_buffered")
 class FedHapBuffered(CycleStrategy):
 
+    def buffer_slots(self, eng: Any) -> int:
+        return max(1, int(eng.cfg.buffer_fraction * eng.cfg.num_orbits))
+
+    def plan_fold(self, eng: Any, st: dict, l: int) -> dict:
+        """Plan-phase mirror of :meth:`fold`: buffer the arrival's slot;
+        on the threshold arrival, price the staleness-discounted flush
+        weights of everything buffered (discounts at flush time, as the
+        reference computes them) and clear the plan-side buffer."""
+        B = self.buffer_slots(eng)
+        slot = st["fill"]
+        st["meta"].append((l, st["base_tag"][l]))
+        st["fill"] += 1
+        if st["fill"] < B:
+            return dict(rhos=np.zeros(B), keep=1.0, slot=slot,
+                        flush=False, folds=0)
+        total = eng.sizes.sum()
+        rhos = np.zeros(B)
+        for j, (jl, btag) in enumerate(st["meta"]):
+            rhos[j] = (eng.sizes[eng.orbit_slice(jl)].sum() / total
+                       * staleness_discount(st["tag"] - btag,
+                                            eng.cfg.staleness_power))
+        keep = max(0.0, 1.0 - float(rhos.sum()))
+        st["meta"].clear()
+        st["fill"] = 0
+        st["tag"] += 1
+        return dict(rhos=rhos, keep=keep, slot=slot, flush=True, folds=1)
+
     def schedule_cycle(self, eng: Any, l: int,
                        t_s: float) -> Optional[Tuple[float, np.ndarray]]:
         t0 = t_s + eng.train_time()
@@ -59,7 +86,7 @@ class FedHapBuffered(CycleStrategy):
         sc = s.scratch
         buf = sc.setdefault("buffer", [])
         buf.append((l, orbit_model, base_tag))
-        if len(buf) < max(1, int(cfg.buffer_fraction * cfg.num_orbits)):
+        if len(buf) < self.buffer_slots(eng):
             return
         total = eng.sizes.sum()
         rhos = np.array([

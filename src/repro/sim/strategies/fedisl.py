@@ -4,34 +4,48 @@ Non-ideal: GS at Rolla — each orbit must wait for ANY member to be
 visible; all K models relay through that member (no partial aggregation,
 so K full models cross the SGL). Ideal: MEO PS above the equator
 (persistent visibility for most orbits) — same rules, ideal station
-config (``stations="meo"``).
+config (``stations="meo"``). Execution rides the shared
+:class:`RoundStrategy` plan/execute split; FedISL evaluates every round.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import numpy as np
 
-from repro.sim.strategies.base import RunState, Strategy, register_strategy
+from repro.sim.strategies.base import RoundStrategy, register_strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class IslRoundPlan:
+    """One FedISL round: lossless FedAvg weights + relay/upload latency."""
+    mu: np.ndarray            # (n_sats,) FedAvg weights (sizes / total)
+    round_end: float          # when the last orbit's K uploads finish [s]
+    t_next: float             # == round_end (no inter-station ring)
 
 
 @register_strategy("fedisl")
-class FedIsl(Strategy):
+class FedIsl(RoundStrategy):
 
-    def step(self, eng: Any, s: RunState) -> bool:
+    def eval_due(self, cfg: Any, events: int) -> bool:
+        return True           # FedISL records accuracy every round
+
+    def plan_round(self, eng: Any, t: float) -> IslRoundPlan | None:
+        """Vectorized schedule for the round starting at ``t``.
+
+        Round latency: train + relay K models halfway around the ring
+        + K full-model uploads through the gateway's single SGL. All
+        orbits' gateway picks and upload delays are one batched gather.
+        """
         cfg = eng.cfg
         k = cfg.sats_per_orbit
-        orbit_t = eng.first_orbit_contacts(s.t)
+        orbit_t = eng.first_orbit_contacts(t)
         if np.isnan(orbit_t).any():
-            s.t = eng.horizon_s + 1.0
-            return False
-        stacked = eng.train_all(s.params)
-        # Round latency: train + relay K models halfway around the ring
-        # + K full-model uploads through the gateway's single SGL. All
-        # orbits' gateway picks and upload delays are one batched gather.
+            return None
         isl = eng.isl_delay()
         L = cfg.num_orbits
-        tidx = np.array([eng._tidx(float(orbit_t[l])) for l in range(L)])
+        tidx = eng.tidx(orbit_t)                   # (L,) batched lookup
         any_vis = eng.any_vis[:, tidx]             # (n_sat, L)
         blocks = any_vis.reshape(L, k, L)[np.arange(L), :, np.arange(L)]
         if not blocks.any(axis=1).all():
@@ -40,14 +54,11 @@ class FedIsl(Strategy):
                 f"member for orbits {np.nonzero(~blocks.any(axis=1))[0]}")
         gw = blocks.argmax(axis=1) + np.arange(L) * k   # first visible
         up = eng.shl_delays(np.zeros(L, dtype=np.int64), gw, tidx)
-        lat = float(np.max((orbit_t - s.t) + eng.train_time()
+        lat = float(np.max((orbit_t - t) + eng.train_time()
                            + (k // 2) * isl + k * up))
         # FedAvg aggregate of ALL satellites (FedISL is lossless).
-        s.params = eng.combine(stacked, eng.sizes / eng.sizes.sum())
-        s.t += lat
-        s.events += 1
-        eng.eval_and_record(s)
-        return True
+        mu = eng.sizes / eng.sizes.sum()
+        return IslRoundPlan(mu, t + lat, t + lat)
 
 
 @register_strategy("fedisl_ideal")

@@ -3,12 +3,18 @@ the PS folds each orbit's fresh average in as it arrives.
 
 All orbits visited in one tick train as a single vmapped dispatch (one
 batched mini-batch gather across every participating satellite); the
-per-orbit async folds stay sequential, as the method requires."""
+per-orbit async folds stay sequential, as the method requires. The tick
+schedule (visited orbits, gateway delays) is param-independent — the
+plan phase — so the fused driver keeps the global and the per-orbit
+base models resident on device and executes each visited tick as ONE
+jitted train->fold dispatch (:meth:`FusedExecutor.fedsat_event`), with
+no per-tick host tree-stacking."""
 from __future__ import annotations
 
 from typing import Any
 
 import jax
+import numpy as np
 
 from repro.core.treeops import tree_add, tree_scale
 from repro.sim.strategies.base import RunState, Strategy, register_strategy
@@ -17,18 +23,31 @@ from repro.sim.strategies.base import RunState, Strategy, register_strategy
 @register_strategy("fedsat")
 class FedSat(Strategy):
 
+    def _plan_tick(self, eng: Any, t: float):
+        """Pure-numpy tick plan: visited orbits + the tick's gateway
+        time advance (None when nothing is visible)."""
+        cfg = eng.cfg
+        vis = eng.vis_at(t).any(axis=0)
+        visited = [l for l in range(cfg.num_orbits)
+                   if vis[eng.orbit_slice(l)].any()]
+        if not visited:
+            return None
+        k = cfg.sats_per_orbit
+        gw_delay = (eng.train_time() + (k // 2) * eng.isl_delay()
+                    + k * eng.shl_delay(0, 0, t))
+        return visited, max(gw_delay, cfg.time_step_s)
+
     def step(self, eng: Any, s: RunState) -> bool:
         cfg = eng.cfg
         k = cfg.sats_per_orbit
         # per-orbit last-known global (staleness source)
         base = s.scratch.setdefault("orbit_base",
                                     [s.params] * cfg.num_orbits)
-        vis = eng.vis_at(s.t).any(axis=0)
-        visited = [l for l in range(cfg.num_orbits)
-                   if vis[eng.orbit_slice(l)].any()]
-        if not visited:
+        plan = self._plan_tick(eng, s.t)
+        if plan is None:
             s.t += cfg.time_step_s
             return True
+        visited, advance = plan
         # ONE training burst for every satellite of every visited orbit,
         # each replica starting from its orbit's last-known global.
         clients = [c for l in visited
@@ -49,8 +68,33 @@ class FedSat(Strategy):
                                 tree_scale(orbit_model, rho))
             base[l] = s.params
             s.events += 1
-        gw_delay = (eng.train_time() + (k // 2) * eng.isl_delay()
-                    + k * eng.shl_delay(0, 0, s.t))
-        s.t += max(gw_delay, cfg.time_step_s)
+        s.t += advance
         eng.eval_and_record(s)
         return True
+
+    def run_fused(self, eng: Any, s: RunState) -> None:
+        cfg = eng.cfg
+        ex = eng.executor
+        k = cfg.sats_per_orbit
+        total = eng.sizes.sum()
+        bases = ex.broadcast_rows(s.params, cfg.num_orbits)
+        while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
+               and s.acc < cfg.target_accuracy):
+            plan = self._plan_tick(eng, s.t)
+            if plan is None:
+                s.t += cfg.time_step_s
+                continue
+            visited, advance = plan
+            clients = [c for l in visited
+                       for c in range(l * k, (l + 1) * k)]
+            idx = eng.trainer.sample_client_indices(
+                eng.fd, clients, cfg.local_steps, eng.rng)
+            sizes = eng.sizes.reshape(cfg.num_orbits, k)[visited]
+            lam_rows = sizes / sizes.sum(axis=1, keepdims=True)
+            rhos = sizes.sum(axis=1) / total
+            s.params, bases = ex.fedsat_event(
+                s.params, bases, np.asarray(visited), idx, lam_rows,
+                rhos)
+            s.events += len(visited)
+            s.t += advance
+            eng.eval_and_record(s)

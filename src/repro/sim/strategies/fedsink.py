@@ -21,7 +21,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.weights import mu_weights
-from repro.sim.strategies.base import RunState, Strategy, register_strategy
+from repro.sim.strategies.base import RoundStrategy, register_strategy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,10 +31,11 @@ class SinkRoundPlan:
     sinks: np.ndarray         # (L,) elected sink satellite ids
     mu: np.ndarray            # (n_sats,) Eq. 14-16 global weights
     round_end: float          # when the last sink's upload completes [s]
+    t_next: float             # round_end + inter-HAP dissemination ring [s]
 
 
 @register_strategy("fedsink")
-class FedSink(Strategy):
+class FedSink(RoundStrategy):
 
     def plan_round(self, eng: Any, t: float) -> SinkRoundPlan | None:
         """Vectorized sink election + pricing for the round at ``t``.
@@ -56,20 +57,7 @@ class FedSink(Strategy):
         visible[np.arange(L), el.sink_slots] = True
         mu = mu_weights(visible.reshape(-1), eng.sizes, k,
                         cfg.partial_mode, cfg.orbit_weighting)
-        return SinkRoundPlan(el.sinks, np.asarray(mu),
-                             max(t, float(upload_end.max())))
-
-    def step(self, eng: Any, s: RunState) -> bool:
-        cfg = eng.cfg
-        plan = self.plan_round(eng, s.t)
-        if plan is None:
-            s.t = eng.horizon_s + 1.0
-            return False
-        stacked = eng.train_all(s.params)
-        s.params = eng.combine(stacked, plan.mu)
-        # inter-HAP ring (down + up) before the next round can start.
-        s.t = plan.round_end + eng.ring_delay()
-        s.events += 1
-        if (s.events - 1) % cfg.eval_every_rounds == 0:
-            eng.eval_and_record(s)
-        return True
+        round_end = max(t, float(upload_end.max()))
+        # Inter-HAP ring (down + up) before the next round can start.
+        return SinkRoundPlan(el.sinks, np.asarray(mu), round_end,
+                             round_end + eng.ring_delay())

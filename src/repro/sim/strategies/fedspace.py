@@ -1,9 +1,19 @@
 """FedSpace (So et al.): semi-asynchronous buffered aggregation against
-a GS with scheduled aggregation; stale updates are down-weighted."""
+a GS with scheduled aggregation; stale updates are down-weighted.
+
+The tick schedule (rising-edge passes) and the staleness weights are
+param-independent — the plan phase — so the fused driver keeps the
+per-satellite base models stacked on device, trains every fresh pass of
+a tick in one jitted dispatch returning the stacked deltas
+(:meth:`FusedExecutor.fedspace_train`), and applies the buffered flush
+through the shared fold backend (:meth:`FusedExecutor.fedspace_flush`)
+— no per-pass host tree-stacking."""
 from __future__ import annotations
 
 from typing import Any
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.treeops import tree_add, tree_sub
@@ -13,6 +23,9 @@ from repro.sim.strategies.base import RunState, Strategy, register_strategy
 
 @register_strategy("fedspace")
 class FedSpace(Strategy):
+
+    def _flush_size(self, eng: Any) -> int:
+        return max(1, int(eng.cfg.buffer_fraction * eng.n_sats))
 
     def step(self, eng: Any, s: RunState) -> bool:
         cfg = eng.cfg
@@ -44,8 +57,7 @@ class FedSpace(Strategy):
                     (sat, delta, int(sc["sat_base_tag"][sat])))
                 sc["sat_base"][sat] = s.params
                 sc["sat_base_tag"][sat] = sc["tag"]
-        if len(sc["buffer"]) >= max(1, int(cfg.buffer_fraction
-                                           * eng.n_sats)):
+        if len(sc["buffer"]) >= self._flush_size(eng):
             total = eng.sizes.sum()
             wts = np.array([
                 eng.sizes[sat] / total
@@ -59,3 +71,47 @@ class FedSpace(Strategy):
             eng.eval_and_record(s)
         s.t += cfg.time_step_s
         return True
+
+    def run_fused(self, eng: Any, s: RunState) -> None:
+        cfg = eng.cfg
+        ex = eng.executor
+        bases = ex.broadcast_rows(s.params, eng.n_sats)
+        base_tag = np.zeros(eng.n_sats, dtype=int)
+        last_seen = np.zeros(eng.n_sats, dtype=bool)
+        buffer = []                        # (deltas (N,...), sats, tags)
+        buffered = 0
+        tag = 0
+        total = eng.sizes.sum()
+        while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
+               and s.acc < cfg.target_accuracy):
+            vis = eng.vis_at(s.t).any(axis=0)
+            new_sats = np.nonzero(vis & ~last_seen)[0]
+            last_seen = vis
+            if len(new_sats):
+                idx = eng.trainer.sample_client_indices(
+                    eng.fd, new_sats.tolist(), cfg.local_steps, eng.rng)
+                deltas, bases = ex.fedspace_train(
+                    s.params, bases, new_sats, idx)
+                buffer.append((deltas, new_sats, base_tag[new_sats]))
+                base_tag[new_sats] = tag
+                buffered += len(new_sats)
+            if buffered >= self._flush_size(eng):
+                # delta chunks are shape-padded by the executor; padding
+                # rows get weight 0 so they drop out of the flush fold.
+                wts = np.concatenate([
+                    np.pad(eng.sizes[sats] / total
+                           * staleness_discount(tag - tags,
+                                                cfg.staleness_power),
+                           (0, jax.tree.leaves(d)[0].shape[0]
+                            - len(sats)))
+                    for d, sats, tags in buffer])
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs),
+                    *[d for d, _, _ in buffer])
+                s.params = ex.fedspace_flush(s.params, stacked, wts)
+                buffer.clear()
+                buffered = 0
+                tag += 1
+                s.events += 1
+                eng.eval_and_record(s)
+            s.t += cfg.time_step_s

@@ -6,6 +6,11 @@ jitted dispatch trains every replica on its own mini-batch stream, and
 the mini-batch streams themselves come from one vectorized index gather
 across all participating clients (``sample_client_batches``) rather
 than a per-client sampling loop.
+
+The index-sampling half (``sample_client_indices``) is split out so the
+fused executor (``repro.sim.executor``) can draw the *same* rng stream
+on the host while performing the image/label gather on device, inside
+the jitted round megastep.
 """
 from __future__ import annotations
 
@@ -40,18 +45,25 @@ class LocalTrainer:
                 return sgd_step(p, xy[0], xy[1])
             return jax.lax.scan(body, params, (images_steps, labels_steps))
 
+        # The un-jitted per-satellite SGD burst is shared with the fused
+        # executor, which embeds it (vmapped) inside its own donated
+        # megastep instead of dispatching `_train_many` per round.
+        self.multi_step = multi_step
         self._train_one = jax.jit(multi_step)
         self._train_many = jax.jit(jax.vmap(multi_step))
         self._eval = jax.jit(model.accuracy)
+        self._eval_chunks = jax.jit(
+            lambda params, xs, ys: jax.lax.map(
+                lambda xy: model.accuracy(params, xy[0], xy[1]), (xs, ys)))
 
     def init(self, seed: int = 0):
         return self.model.init(jax.random.key(seed))
 
     # ------------------------------------------------------------------
-    def sample_client_batches(self, fd: FederatedData,
+    def sample_client_indices(self, fd: FederatedData,
                               clients: Sequence[int], n_steps: int,
-                              rng: np.random.Generator):
-        """Mini-batch streams for MANY clients as ONE index gather.
+                              rng: np.random.Generator) -> np.ndarray:
+        """Global dataset indices for MANY clients' mini-batch streams.
 
         Keeps the per-client reference semantics — sample WITHOUT
         replacement when the shard covers the burst, with replacement
@@ -60,9 +72,7 @@ class LocalTrainer:
         uniform sort keys (a batched distinct-uniform draw in random
         order), smaller shards take floor(uniform * size) indices.
         Local indices map to global ones through the cached padded
-        table and images/labels are gathered in a single fancy-index
-        op. Returns ``(C, n_steps, bs, ...)`` arrays. The old path did
-        one ``rng.choice`` + ``np.stack`` round-trip per client.
+        table. Returns ``(C, n_steps * bs)`` int64 global indices.
         """
         clients = np.asarray(clients, dtype=np.int64)
         padded, sizes = fd.padded_indices()
@@ -83,10 +93,23 @@ class LocalTrainer:
             valid = np.arange(padded.shape[1])[None, :] < szs[~small][:, None]
             local[~small] = np.argsort(
                 np.where(valid, keys, np.inf), axis=1)[:, :need]
-        sel = padded[clients[:, None], local]          # (C, need) global
-        x = fd.images[sel].reshape(len(clients), n_steps, self.batch_size,
+        return padded[clients[:, None], local]           # (C, need) global
+
+    def sample_client_batches(self, fd: FederatedData,
+                              clients: Sequence[int], n_steps: int,
+                              rng: np.random.Generator):
+        """Mini-batch streams for MANY clients as ONE index gather.
+
+        ``sample_client_indices`` draws the index table; images/labels
+        are gathered in a single fancy-index op. Returns
+        ``(C, n_steps, bs, ...)`` arrays.
+        """
+        sel = self.sample_client_indices(fd, clients, n_steps, rng)
+        n_clients, need = sel.shape
+        n_steps = need // self.batch_size
+        x = fd.images[sel].reshape(n_clients, n_steps, self.batch_size,
                                    *fd.images.shape[1:])
-        y = fd.labels[sel].reshape(len(clients), n_steps, self.batch_size)
+        y = fd.labels[sel].reshape(n_clients, n_steps, self.batch_size)
         return x, y
 
     def train_client(self, params, fd: FederatedData, client: int,
@@ -108,12 +131,29 @@ class LocalTrainer:
 
     def evaluate(self, params, images: np.ndarray, labels: np.ndarray,
                  batch: int = 2048) -> float:
-        accs = []
-        for i in range(0, len(images), batch):
-            accs.append(float(self._eval(
-                params, jnp.asarray(images[i:i + batch]),
-                jnp.asarray(labels[i:i + batch]))) * len(images[i:i + batch]))
-        return sum(accs) / len(images)
+        """Chunked accuracy with ONE device->host transfer.
+
+        The full chunks run through a single jitted ``lax.map``
+        reduction (same per-chunk accuracy math as before, bit-equal),
+        the ragged tail through the scalar eval; all per-chunk means
+        come back in one stacked transfer and the float64 weighted
+        average happens on the host. The old path synced the device
+        once per chunk via ``float()``.
+        """
+        n = len(images)
+        n_full, rem = divmod(n, batch)
+        means = []
+        if n_full:
+            xs = jnp.asarray(images[:n_full * batch]).reshape(
+                n_full, batch, *images.shape[1:])
+            ys = jnp.asarray(labels[:n_full * batch]).reshape(n_full, batch)
+            means.append(self._eval_chunks(params, xs, ys))
+        if rem:
+            means.append(self._eval(params, jnp.asarray(images[-rem:]),
+                                    jnp.asarray(labels[-rem:]))[None])
+        means = np.asarray(jnp.concatenate(means))       # ONE transfer
+        lens = [batch] * n_full + ([rem] if rem else [])
+        return sum(float(m) * l for m, l in zip(means, lens)) / n
 
     @staticmethod
     def stack(params_list: Sequence[Any]):

@@ -73,11 +73,15 @@ class TestGeometryBench:
     def test_smoke_tier_writes_full_schema(self, tmp_path):
         doc = bench_geometry.run(smoke=True)
         for key in ("schema", "grid_build", "delay_table", "routing",
-                    "sweep", "sim_wallclock"):
+                    "sim_fused", "sweep", "sim_wallclock"):
             assert key in doc
         assert all(r["speedup"] > 0 for r in doc["grid_build"])
         assert all(r["rounds_per_sec"] > 0 for r in doc["sweep"])
         assert doc["routing"]["async_sweep"]["async_rps"] > 0
+        assert {r["strategy"] for r in doc["sim_fused"]} == {
+            "fedhap", "fedhap_async", "fedhap_buffered"}
+        assert all(r["fused_rps"] > 0 and r["per_round_rps"] > 0
+                   for r in doc["sim_fused"])
 
 
 class TestRendering:
