@@ -15,8 +15,11 @@ Four sections, all recorded to ``BENCH_sim.json`` (schema documented in
 - **routing** — the ISL routing subsystem: contact-graph (LoS grid +
   edge-next table) build times up to a 20x40 shell, batched
   earliest-arrival search vs the per-edge Python reference (checked
-  allclose), and the scheduling-only throughput of the routed
-  ``fedhap_async`` event loop vs fedhap rounds.
+  allclose), the scheduling-only throughput of the routed
+  ``fedhap_async`` event loop vs fedhap rounds, and the stitched
+  windowed router vs the single-graph oracle on mega shells
+  (``stitched_sweep``: build/route costs checked allclose + buffered
+  scheduling events/s over the window chain).
 - **sim_fused** — the fused plan-ahead driver vs the per-round /
   per-event reference loop (local SGD excluded) for fedhap,
   fedhap_async, and fedhap_buffered on the paper 5x8 shell and a 10x20
@@ -184,6 +187,79 @@ def bench_earliest_arrival(shell: tuple[int, int] = (5, 8),
     }
 
 
+def bench_stitched_sweep(shell: tuple[int, int], horizon_h: float,
+                         step_s: float, windows: int = 4,
+                         rounds: int = 20, n_sources: int = 8) -> dict:
+    """Stitched windowed routing vs the single-graph oracle on one
+    mega shell: whole-horizon graph build cost vs lazy window builds,
+    all-horizon earliest-arrival cost (checked allclose between the two
+    — the PR-5 exactness acceptance), and the scheduling-only
+    ``fedhap_buffered`` event throughput riding the stitched router
+    (sink election + cross-plane routed exits, local SGD excluded)."""
+    import dataclasses
+
+    from repro.sim.strategies import get_strategy
+    S = shell[0] * shell[1]
+    T = int(horizon_h * 3600 / step_s) + 2
+    # Budget sized for ~`windows` half-overlapping windows of the grid.
+    W = max(32, (2 * T) // (windows + 1))
+    cfg = dataclasses.replace(
+        _scenario_cfg("two_hap", shell, horizon_h, step_s),
+        strategy="fedhap_buffered", isl_grid_max_bytes=S * S * 3 * W)
+    eng = RoundEngine(cfg)
+    router = eng.contact_graph(0.0)
+
+    t0 = time.perf_counter()
+    oracle = eng.full_contact_graph()
+    oracle_build_s = time.perf_counter() - t0
+    srcs = np.linspace(0, S - 1, n_sources).astype(np.int64)
+    t0 = time.perf_counter()
+    arr_o = earliest_arrival(oracle, srcs, 0.0)
+    oracle_route_s = time.perf_counter() - t0
+    del oracle
+
+    t0 = time.perf_counter()
+    arr_s = earliest_arrival(router, srcs, 0.0)   # builds windows lazily
+    stitched_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    earliest_arrival(router, srcs, 0.0)           # windows now cached
+    stitched_warm_s = time.perf_counter() - t0
+    assert np.allclose(np.nan_to_num(arr_s, posinf=1e18),
+                       np.nan_to_num(arr_o, posinf=1e18),
+                       rtol=1e-9, atol=1e-6), \
+        "stitched windowed routing != single-graph oracle"
+
+    strat = get_strategy("fedhap_buffered")()
+
+    def drive():
+        st = strat.init_plan_state(eng, 0.0)
+        n = 0
+        while n < rounds:
+            events = strat.plan_events(eng, st, rounds - n)
+            if not events:
+                break
+            n += len(events)
+        return n
+
+    drive()                       # warm the window + election caches
+    eng._sink_cache.clear()       # time steady-state pricing, not memo hits
+    t0 = time.perf_counter()
+    n = drive()
+    sched_s = time.perf_counter() - t0
+    return {
+        "shell": f"{shell[0]}x{shell[1]}", "n_sats": S, "T": T,
+        "horizon_h": horizon_h,
+        "windows": len(router.window_starts(0.0)),
+        "window_steps": eng._window_steps,
+        "oracle_build_s": round(oracle_build_s, 4),
+        "oracle_route_s": round(oracle_route_s, 4),
+        "stitched_cold_s": round(stitched_cold_s, 4),
+        "stitched_warm_s": round(stitched_warm_s, 4),
+        "sched_rounds": n,
+        "sched_rps": round(n / sched_s, 2),
+    }
+
+
 def bench_async_sweep(rounds: int, horizon_h: float = 168.0) -> dict:
     """Scheduling-only fedhap_async event throughput vs fedhap rounds on
     the paper 5x8 shell (same engine, same exclusion of local SGD)."""
@@ -207,10 +283,14 @@ def bench_routing(smoke: bool) -> dict:
         build_shells = [((5, 8), 6.0), ((6, 10), 6.0)]
         ea_kw = dict(horizon_h=3.0, n_ref_sources=2)
         sweep_rounds, sweep_horizon = 20, 72.0
+        stitched_shells = [((6, 10), 6.0)]
+        stitched_rounds = 10
     else:
         build_shells = [((5, 8), 12.0), ((10, 20), 6.0), ((20, 40), 2.0)]
         ea_kw = dict(horizon_h=6.0, n_ref_sources=4)
         sweep_rounds, sweep_horizon = 100, 168.0
+        stitched_shells = [((10, 20), 6.0), ((20, 40), 2.0)]
+        stitched_rounds = 20
 
     doc: dict = {"table_build": []}
     for shell, horizon_h in build_shells:
@@ -229,6 +309,16 @@ def bench_routing(smoke: bool) -> dict:
     print(f"routing.async_sweep[5x8]: fedhap_async {r['async_rps']:.1f} "
           f"events/s vs fedhap {r['fedhap_rps']:.1f} rounds/s "
           f"(ratio {r['ratio']:.2f})", flush=True)
+    doc["stitched_sweep"] = []
+    for shell, horizon_h in stitched_shells:
+        row = bench_stitched_sweep(shell, horizon_h, 60.0,
+                                   rounds=stitched_rounds)
+        doc["stitched_sweep"].append(row)
+        print(f"routing.stitched_sweep[{row['shell']} x {row['windows']}w]:"
+              f" oracle build {row['oracle_build_s']:.2f}s vs stitched "
+              f"cold {row['stitched_cold_s']:.2f}s / warm "
+              f"{row['stitched_warm_s']:.3f}s (allclose), buffered "
+              f"{row['sched_rps']:.1f} events/s", flush=True)
     return doc
 
 

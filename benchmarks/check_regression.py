@@ -45,6 +45,9 @@ def _rate_metrics(doc: dict) -> dict[str, float]:
             sweep.get("async_rps"))
         put(f"routing.async_sweep[{sweep.get('shell')}].fedhap_rps",
             sweep.get("fedhap_rps"))
+    for row in routing.get("stitched_sweep") or []:
+        put(f"routing.stitched_sweep[{row['shell']}].sched_rps",
+            row.get("sched_rps"))
     wall = doc.get("sim_wallclock") or {}
     if wall:
         put("sim_wallclock.engine_rps", wall.get("engine_rps"))

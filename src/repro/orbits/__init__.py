@@ -17,9 +17,11 @@ vectorized over distance so delay tables over whole grids are one call.
 
 On top of the grids sits the routing subsystem (`repro.orbits.routing`):
 time-expanded ISL contact graphs (`build_contact_graph`), batched
-earliest-arrival search (`earliest_arrival`), routed multi-hop path
-extraction, and per-orbit sink election (`elect_sinks`) — the substrate
-of the simulator's fedsink / fedhap_async / fedhap_buffered strategies.
+resumable earliest-arrival search (`earliest_arrival`), routed
+multi-hop path extraction, stitched window chains for mega-shell grids
+(`WindowedRouter`), and per-orbit sink election (`elect_sinks`) — the
+substrate of the simulator's fedsink / fedhap_async / fedhap_buffered
+strategies.
 """
 from repro.orbits.constellation import (
     EARTH_RADIUS_M,
@@ -51,6 +53,7 @@ from repro.orbits.visibility import (
 from repro.orbits.routing import (
     ContactGraph,
     SinkElection,
+    WindowedRouter,
     build_contact_graph,
     earliest_arrival,
     earliest_arrival_reference,
@@ -81,8 +84,9 @@ __all__ = [
     "sat_sat_visibility_mask", "sat_sat_visible", "stations_eci",
     "visibility_mask", "visibility_mask_pairwise", "visibility_windows",
     "windows_from_mask",
-    "ContactGraph", "SinkElection", "build_contact_graph",
-    "earliest_arrival", "earliest_arrival_reference", "elect_sinks",
+    "ContactGraph", "SinkElection", "WindowedRouter",
+    "build_contact_graph", "earliest_arrival",
+    "earliest_arrival_reference", "elect_sinks",
     "extract_path", "predecessors",
     "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
     "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",

@@ -16,9 +16,20 @@ routing subsystem, built on the batched geometry engine:
   label-correcting Bellman-Ford over time slices, expressed as
   ``(N, S, S)`` array relaxations (gather next contact -> price edge ->
   min-reduce), no per-edge Python. Waiting at a satellite is free; a
-  transmission departs at the edge's next contact on the grid.
+  transmission departs at the edge's next contact on the grid. The
+  relaxation is *resumable*: ``init`` warm-starts it from a previous
+  arrival frontier, so it can be chained across grid windows.
 - :func:`predecessors` / :func:`extract_path` — routed multi-hop paths
   recovered from the converged arrival table.
+- :class:`WindowedRouter` — the stitched window chain for grids too
+  large to materialize whole (``SimConfig.isl_grid_max_bytes``):
+  half-overlapping windows of the horizon are compiled lazily (through
+  the engine's LRU) and relaxed in order, each warm-started from the
+  previous window's frontier, until no later departure can improve any
+  arrival. Per-window predecessor tables are spliced into one global
+  hop list, so windowed routing is exact against the single-graph
+  oracle (`build_contact_graph` over the full horizon) — routes that
+  cross a window boundary are no longer dropped.
 - :func:`earliest_arrival_reference` — the per-edge Python
   label-correcting reference the batched search must match (allclose).
 - :func:`elect_sinks` — per-orbit sink election: each candidate is
@@ -115,19 +126,26 @@ def build_contact_graph(
     if positions is None:
         positions = constellation.positions_eci(grid_t)
     isl = isl_mask_from_positions(positions, grazing_altitude_m)
-    dtype = np.int16 if len(grid_t) < np.iinfo(np.int16).max else np.int32
+    # The sentinel is T itself, so the dtype must represent T+1 values
+    # (0..T inclusive): int16 is good through exactly T = 32767.
+    dtype = np.int16 if len(grid_t) <= np.iinfo(np.int16).max else np.int32
     edge_next = next_contact_table(isl, dtype=dtype)
     return ContactGraph(grid_t=grid_t, positions=positions, isl_vis=isl,
                         edge_next=edge_next, n_params=n_params)
 
 
-def subgraph(graph: ContactGraph, sat_ids: Sequence[int]) -> ContactGraph:
+def subgraph(graph: "ContactGraph | WindowedRouter",
+             sat_ids: Sequence[int]) -> "ContactGraph | WindowedRouter":
     """Induced contact graph over a subset of satellites (local ids
     0..n-1 in ``sat_ids`` order). Edge series are per-pair independent,
     so the sub-tables are plain gathers of the compiled full tables —
     used for intra-plane routing (sink election propagates models inside
     one orbit ring) where relaxing over the whole shell would be waste.
+    A :class:`WindowedRouter` induces a sub-router whose windows are
+    gathered lazily from the parent's.
     """
+    if isinstance(graph, WindowedRouter):
+        return graph.subgraph(sat_ids)
     ids = np.asarray(sat_ids, dtype=np.int64)
     return ContactGraph(
         grid_t=graph.grid_t,
@@ -139,10 +157,11 @@ def subgraph(graph: ContactGraph, sat_ids: Sequence[int]) -> ContactGraph:
 
 
 def earliest_arrival(
-    graph: ContactGraph,
+    graph: "ContactGraph | WindowedRouter",
     sources: Sequence[int],
     t0: float,
     max_hops: Optional[int] = None,
+    init: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Batched earliest-arrival over the time-expanded graph.
 
@@ -155,12 +174,31 @@ def earliest_arrival(
     the contact geometry, and min-reduces over predecessors — one
     ``(N, S, S)`` evaluation per sweep, converging in at most the hop
     diameter of the graph (capped at ``max_hops``, default S).
+
+    ``init`` warm-starts the relaxation from an ``(N, S)`` arrival
+    frontier of a previous run instead of the point sources — the
+    resumable form :class:`WindowedRouter` chains across grid windows
+    (frontier entries before the window wait at their satellite for the
+    window's first contact; entries past the window end cannot depart
+    but can still be improved). A :class:`WindowedRouter` passed as
+    ``graph`` routes through its stitched window chain, where
+    ``max_hops`` caps each *window's* relaxation; warm-starting a
+    router is not supported — it owns its chain's frontiers.
     """
-    S, T = graph.n_sats, graph.n_steps
+    if isinstance(graph, WindowedRouter):
+        if init is not None:
+            raise ValueError(
+                "init= warm-starts a single ContactGraph relaxation; a "
+                "WindowedRouter chains its own frontiers")
+        return graph.earliest_arrival(sources, t0, max_hops=max_hops)
+    S = graph.n_sats
     src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     N = len(src)
-    arr = np.full((N, S), np.inf)
-    arr[np.arange(N), src] = float(t0)
+    if init is None:
+        arr = np.full((N, S), np.inf)
+        arr[np.arange(N), src] = float(t0)
+    else:
+        arr = np.array(init, dtype=np.float64, copy=True)
     aidx = np.arange(S)[None, :, None]
     bidx = np.arange(S)[None, None, :]
     for _ in range(max_hops or S):
@@ -188,14 +226,32 @@ def _relax_candidates(graph: ContactGraph, arr: np.ndarray,
                     np.inf)
 
 
-def predecessors(graph: ContactGraph, sources: Sequence[int],
-                 arr: np.ndarray) -> np.ndarray:
+def predecessors(graph: "ContactGraph | WindowedRouter",
+                 sources: Sequence[int], arr: np.ndarray,
+                 carry: Optional[np.ndarray] = None) -> np.ndarray:
     """Predecessor table of a converged :func:`earliest_arrival` result.
 
     One extra relaxation sweep against the final arrival times; returns
     ``(N, S)`` int — the satellite the shortest-delay route enters
-    ``b`` from, or -1 at sources and unreachable satellites.
+    ``b`` from, or -1 at sources and unreachable satellites. Settled
+    labels are judged under the same ``_EPS_S`` tolerance the arrival
+    relaxation converges on — a looser (or tighter) epsilon here would
+    let a frontier read settled in one pass and unsettled in the other,
+    yielding spurious ``-1`` predecessors on converged tables.
+
+    ``carry`` splices window chains: an ``(N, S)`` predecessor table
+    from earlier windows whose non-negative entries (labels settled by
+    an earlier window's contacts) take precedence over this sweep. A
+    :class:`WindowedRouter` passed as ``graph`` walks its whole window
+    chain and returns the spliced table (``carry`` is the per-window
+    mechanism and cannot be combined with a router).
     """
+    if isinstance(graph, WindowedRouter):
+        if carry is not None:
+            raise ValueError(
+                "carry= splices single-window sweeps; a WindowedRouter "
+                "builds the spliced table itself")
+        return graph.predecessors(sources, arr)
     S = graph.n_sats
     src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     aidx = np.arange(S)[None, :, None]
@@ -203,8 +259,10 @@ def predecessors(graph: ContactGraph, sources: Sequence[int],
     cand = _relax_candidates(graph, arr, aidx, bidx)
     best = cand.min(axis=1)
     pred = cand.argmin(axis=1)
-    settled = np.isfinite(arr) & (best <= arr + 1e-6)
+    settled = np.isfinite(arr) & (best <= arr + _EPS_S)
     pred = np.where(settled, pred, -1)
+    if carry is not None:
+        pred = np.where(carry >= 0, carry, pred)
     pred[np.arange(len(src)), src] = -1
     return pred
 
@@ -252,6 +310,132 @@ def earliest_arrival_reference(graph: ContactGraph, source: int,
     return arr
 
 
+class WindowedRouter:
+    """Stitched routing over a chain of half-overlapping grid windows.
+
+    When the whole-horizon ``(S, S, T)`` contact structures blow the
+    byte budget, the engine compiles *windows* of ``window_steps`` grid
+    indices starting every ``window_steps // 2`` (the final start is
+    clamped to the grid end, so most departure indices get at least
+    half a window of lookahead and the chain always covers the grid
+    contiguously). A query is answered
+    by relaxing window after window, warm-starting each from the
+    previous frontier (:func:`earliest_arrival` with ``init``): an
+    arrival labelled near a window's end simply waits, and departs at
+    its edge's first contact inside the next window — exactly the routes
+    the old single-window lookup dropped as unreachable.
+
+    The chain stops as soon as every arrival is finite and earlier than
+    the next window's start time: any candidate a later window could
+    generate departs at or after that start, so no label can improve.
+    Arrival values are computed by the same float ops on the same
+    position slices as the full-horizon oracle, so stitched results
+    match :func:`build_contact_graph` over the whole grid allclose
+    (bit-equal in practice).
+
+    ``build_window``: ``i0 -> ContactGraph`` over grid indices
+    ``[i0, i0 + window_steps)`` — the engine backs it with its contact
+    LRU (``SimConfig.contact_graph_cache``), so windows are built
+    lazily and evicted under memory pressure.
+    """
+
+    def __init__(self, grid_t: np.ndarray, n_sats: int, window_steps: int,
+                 build_window: Callable[[int], ContactGraph]):
+        self.grid_t = np.asarray(grid_t, dtype=np.float64)
+        self._n_sats = int(n_sats)
+        self.window_steps = int(window_steps)
+        self.half = max(1, self.window_steps // 2)
+        self._build = build_window
+
+    @property
+    def n_sats(self) -> int:
+        return self._n_sats
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.grid_t)
+
+    @property
+    def step_s(self) -> float:
+        return float(self.grid_t[1] - self.grid_t[0]) if self.n_steps > 1 \
+            else 1.0
+
+    def _tidx(self, t_s: float) -> int:
+        rel = (float(t_s) - float(self.grid_t[0])) / self.step_s
+        return int(np.clip(int(rel), 0, self.n_steps - 1))
+
+    def window_starts(self, t_s: float) -> list[int]:
+        """Window start indices covering ``t_s`` through the grid end:
+        multiples of ``half`` from the window containing ``t_s``, with
+        the last start clamped so the final window reaches the end. A
+        penultimate start whose window the clamped final one would
+        subsume (``start >= last - half``) is skipped — the two
+        neighbors already cover every grid index, so emitting it would
+        compile one redundant window per chain traversal."""
+        T, W, half = self.n_steps, self.window_steps, self.half
+        last = max(0, T - W)
+        i0 = min((self._tidx(t_s) // half) * half, last)
+        starts = []
+        while True:
+            starts.append(i0)
+            if i0 >= last:
+                return starts
+            nxt = i0 + half
+            i0 = nxt if nxt + half < last else last
+
+    def window(self, i0: int) -> ContactGraph:
+        """The compiled window starting at grid index ``i0``."""
+        return self._build(int(i0))
+
+    def window_covering(self, t_s: float) -> ContactGraph:
+        """The single window the pre-stitching lookup would have used
+        for a query at ``t_s`` (kept for diagnostics and the boundary
+        regression tests)."""
+        return self.window(self.window_starts(t_s)[0])
+
+    def subgraph(self, sat_ids: Sequence[int]) -> "WindowedRouter":
+        ids = np.asarray(sat_ids, dtype=np.int64)
+        return WindowedRouter(
+            self.grid_t, len(ids), self.window_steps,
+            lambda i0: subgraph(self._build(i0), ids))
+
+    def earliest_arrival(self, sources: Sequence[int], t0: float,
+                         max_hops: Optional[int] = None) -> np.ndarray:
+        """Stitched ``(N, S)`` earliest arrivals (see class docstring)."""
+        src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+        arr = np.full((len(src), self.n_sats), np.inf)
+        arr[np.arange(len(src)), src] = float(t0)
+        starts = self.window_starts(t0)
+        for k, i0 in enumerate(starts):
+            arr = earliest_arrival(self.window(i0), src, t0,
+                                   max_hops=max_hops, init=arr)
+            if k + 1 < len(starts) and np.isfinite(arr).all() \
+                    and float(arr.max()) <= float(self.grid_t[starts[k + 1]]):
+                break      # later windows' candidates all depart too late
+        return arr
+
+    def predecessors(self, sources: Sequence[int],
+                     arr: np.ndarray) -> np.ndarray:
+        """Splice per-window predecessor tables of a stitched arrival
+        result into one global ``(N, S)`` table: each label keeps the
+        predecessor from the first window whose contacts settle it
+        (earlier windows' contacts are what the label actually rode).
+        ``extract_path`` walks the spliced table unchanged."""
+        src = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+        arr = np.asarray(arr, dtype=np.float64)
+        t0 = float(arr[np.arange(len(src)), src].min())
+        finite = arr[np.isfinite(arr)]
+        t_hi = float(finite.max()) if finite.size else t0
+        pred = np.full(arr.shape, -1, dtype=np.int64)
+        for i0 in self.window_starts(t0):
+            if float(self.grid_t[i0]) > t_hi:
+                break      # this window's candidates all arrive past arr
+            pred = predecessors(self.window(i0), src, arr, carry=pred)
+            if (pred >= 0).sum() == np.isfinite(arr).sum() - len(src):
+                break      # every reachable non-source label settled
+        return pred
+
+
 @dataclasses.dataclass(frozen=True)
 class SinkElection:
     """Per-orbit sink election result (all arrays over L orbits).
@@ -293,7 +477,7 @@ ExitCost = Union[np.ndarray, Callable[[np.ndarray, np.ndarray], np.ndarray]]
 
 
 def elect_sinks(
-    graph: ContactGraph,
+    graph: "ContactGraph | WindowedRouter",
     members: np.ndarray,
     sizes: np.ndarray,
     t0: float,
@@ -351,7 +535,8 @@ def elect_sinks(
 
 
 __all__ = [
-    "ContactGraph", "SinkElection", "build_contact_graph",
-    "earliest_arrival", "earliest_arrival_reference", "elect_sinks",
-    "extract_path", "onehot_chain_weights", "predecessors", "subgraph",
+    "ContactGraph", "SinkElection", "WindowedRouter",
+    "build_contact_graph", "earliest_arrival",
+    "earliest_arrival_reference", "elect_sinks", "extract_path",
+    "onehot_chain_weights", "predecessors", "subgraph",
 ]

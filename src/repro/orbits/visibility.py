@@ -286,7 +286,9 @@ def next_contact_table(vis: np.ndarray, dtype=np.int64) -> np.ndarray:
     """
     vis = np.asarray(vis, dtype=bool)
     T = vis.shape[-1]
-    if T >= np.iinfo(dtype).max:
+    # Stored values span 0..T inclusive (T is the no-contact sentinel),
+    # so the dtype must hold T itself — T == iinfo.max is still exact.
+    if T > np.iinfo(dtype).max:
         raise ValueError(f"{T} time steps overflow {np.dtype(dtype).name}")
     idx = np.where(vis, np.arange(T, dtype=dtype), np.asarray(T, dtype=dtype))
     return np.minimum.accumulate(idx[..., ::-1], axis=-1)[..., ::-1]

@@ -36,11 +36,14 @@ Architecture (see also ``repro.core.strategies``):
 
   * **route/sink caches** — the ISL routing subsystem
     (:mod:`repro.orbits.routing`) plugs in through
-    :meth:`RoundEngine.contact_graph` (windowed, cached time-expanded
-    contact graphs over the all-pairs ISL LoS grid) and
+    :meth:`RoundEngine.contact_graph` (one time-expanded contact graph
+    over the all-pairs ISL LoS grid when it fits the byte budget, a
+    stitched :class:`~repro.orbits.routing.WindowedRouter` over
+    LRU-cached half-overlapping windows past it — exact either way) and
     :meth:`RoundEngine.elect_sinks` (memoized per-orbit sink elections);
     :meth:`RoundEngine.station_upload_end` prices whole batches of
-    routed exits (next station contact + SHL transfer) in one gather.
+    routed exits (next station contact + SHL transfer) in one gather,
+    and :meth:`RoundEngine.route_exit_end` the cross-plane routed exit.
 
 - Strategies (fedhap | fedisl | fedisl_ideal | fedsat | fedspace |
   fedsink | fedhap_async | fedhap_buffered) are small registered classes
@@ -79,7 +82,9 @@ from repro.orbits import (
 from repro.orbits.routing import (
     ContactGraph,
     SinkElection,
+    WindowedRouter,
     build_contact_graph,
+    earliest_arrival,
     elect_sinks,
     onehot_chain_weights,
     subgraph,
@@ -130,10 +135,14 @@ class SimConfig:
     # LRU capacity (in columns) of the lazy per-column delay cache
     delay_column_cache: int = 4096
     # routing subsystem: budget for one windowed (S, S, W) contact graph
-    # (ISL LoS grid + int16 edge table); grids past it route over
-    # sliding windows of the horizon instead of the whole grid
+    # (ISL LoS grid + int16 edge table); grids past it route over a
+    # stitched chain of half-overlapping windows (WindowedRouter) —
+    # exact against the whole-grid oracle, windows built lazily
     isl_grid_max_bytes: int = 256 * 2**20
     isl_grazing_altitude_m: float = 80_000.0
+    # LRU capacity (in windows) of the compiled contact-graph cache,
+    # mirroring delay_column_cache for the lazy delay path
+    contact_graph_cache: int = 4
 
 
 @dataclasses.dataclass
@@ -260,6 +269,16 @@ class RoundEngine:
         self._contact_graphs: OrderedDict[int, ContactGraph] = OrderedDict()
         self._orbit_graphs: OrderedDict[Any, ContactGraph] = OrderedDict()
         self._sink_cache: OrderedDict[Any, SinkElection] = OrderedDict()
+        # Window length (grid steps) of one compiled contact graph under
+        # the byte budget; the whole horizon when it fits. Windows stay
+        # under the int16 sentinel so the edge table never silently
+        # widens to int32 (which would bust the byte budget).
+        per_step = self.n_sats * self.n_sats * 3   # 1B LoS + 2B int16
+        self._window_steps = int(max(32, min(
+            n_steps, np.iinfo(np.int16).max,
+            cfg.isl_grid_max_bytes // max(1, per_step))))
+        self._router: Optional[WindowedRouter] = None
+        self._orbit_routers: dict[int, WindowedRouter] = {}
         self._onehot_lam = onehot_chain_weights(
             self.sizes.reshape(L, k), cfg.partial_mode)     # (L, k, k)
 
@@ -427,43 +446,75 @@ class RoundEngine:
         return np.where(ok, tt, np.nan)
 
     # ----------------------------------------------- routing subsystem
-    def contact_graph(self, t_s: float = 0.0) -> ContactGraph:
-        """Time-expanded ISL contact graph covering ``t_s`` (route cache).
-
-        When the whole-horizon ``(S, S, T)`` structures fit
-        ``SimConfig.isl_grid_max_bytes`` one graph is built and reused
-        for every query; past the budget, half-overlapping windows of
-        the grid are compiled on demand and memoized (up to 4), so
-        mega-constellation shells route over sliding windows instead of
-        materializing the full edge table.
-        """
-        T = len(self.grid_t)
-        S = self.n_sats
-        per_step = S * S * 3           # 1-byte LoS + 2-byte int16 table
-        # Windows stay under the int16 sentinel so the edge table never
-        # silently widens to int32 (which would bust the byte budget).
-        W = int(max(32, min(T, np.iinfo(np.int16).max - 1,
-                            self.cfg.isl_grid_max_bytes
-                            // max(1, per_step))))
-        if W >= T:
-            i0 = 0
-        else:
-            half = max(1, W // 2)
-            i0 = min((self._tidx(t_s) // half) * half, T - W)
+    def _window_graph(self, i0: int) -> ContactGraph:
+        """Compile (or fetch) the contact-graph window starting at grid
+        index ``i0``, memoized in an LRU of
+        ``SimConfig.contact_graph_cache`` windows (mirrors the lazy
+        delay-column cache: stitched sweeps revisit neighboring windows,
+        eviction drops the least-recently routed one)."""
         graph = self._contact_graphs.get(i0)
         if graph is None:
-            sl = slice(i0, min(i0 + W, T))
+            sl = slice(i0, min(i0 + self._window_steps, len(self.grid_t)))
             graph = build_contact_graph(
                 self.constellation, self.grid_t[sl],
                 self.model_bits // 32,
                 grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
                 positions=self._sat_pos[:, sl])
             self._contact_graphs[i0] = graph
-            if len(self._contact_graphs) > 4:
+            if len(self._contact_graphs) > max(1,
+                                               self.cfg.contact_graph_cache):
                 self._contact_graphs.popitem(last=False)
         else:
             self._contact_graphs.move_to_end(i0)
         return graph
+
+    def contact_graph(self, t_s: float = 0.0) -> Union[ContactGraph,
+                                                       WindowedRouter]:
+        """The routing substrate covering ``t_s`` (route cache).
+
+        When the whole-horizon ``(S, S, T)`` structures fit
+        ``SimConfig.isl_grid_max_bytes`` one :class:`ContactGraph` is
+        built and reused for every query. Past the budget the engine
+        hands out a :class:`WindowedRouter` instead: half-overlapping
+        windows of the grid are compiled on demand (through the
+        ``contact_graph_cache`` LRU) and arrival frontiers are stitched
+        across them, so mega-constellation shells route exactly like
+        the single-graph oracle — including routes that cross a window
+        boundary — without materializing the full edge table. Both
+        returns answer the same `repro.orbits.routing` API
+        (``earliest_arrival`` / ``predecessors`` / ``subgraph`` /
+        ``elect_sinks`` dispatch on the type).
+        """
+        if self._window_steps >= len(self.grid_t):
+            return self._window_graph(0)
+        if self._router is None:
+            self._router = WindowedRouter(
+                self.grid_t, self.n_sats, self._window_steps,
+                self._window_graph)
+        return self._router
+
+    def full_contact_graph(self) -> ContactGraph:
+        """Single-graph oracle over the whole horizon grid, ignoring
+        ``isl_grid_max_bytes`` — the stitched-equivalence baseline for
+        tests and ``benchmarks.bench_geometry`` (routing.stitched_sweep).
+        Built fresh on every call; not part of the route caches."""
+        return build_contact_graph(
+            self.constellation, self.grid_t, self.model_bits // 32,
+            grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
+            positions=self._sat_pos)
+
+    def route_exit_end(self, sat_idx: int, t_s: float) -> float:
+        """Earliest completed station upload reachable from ``sat_idx``
+        holding a model at ``t_s``, allowed to ride cross-plane ISL
+        routes: one (stitched) earliest-arrival sweep to every satellite
+        plus one batched exit-pricing gather
+        (:meth:`station_upload_end`) over the landings — the routed
+        exit decision behind ``fedhap_buffered``. Returns inf when no
+        route completes before the horizon."""
+        graph = self.contact_graph(float(t_s))
+        arr = earliest_arrival(graph, [int(sat_idx)], float(t_s))[0]
+        return float(np.min(self.station_upload_end(
+            np.arange(self.n_sats), arr)))
 
     def station_upload_end(self, sat_idx, t_s) -> np.ndarray:
         """Earliest completion of an upload from satellite(s) ready at
@@ -488,20 +539,36 @@ class RoundEngine:
         shl = self.shl_delays(owner, sat, jj)
         return np.where(ok, tt + shl, np.inf)
 
-    def orbit_subgraph(self, l: int, t_s: float = 0.0) -> ContactGraph:
-        """Induced intra-plane contact graph of orbit ``l`` covering
-        ``t_s`` (cached): the ring members plus every intra-plane chord
-        with line of sight — the substrate of sink-election routing."""
-        g = self.contact_graph(t_s)
-        key = (l, float(g.grid_t[0]))
+    def _orbit_window(self, l: int, i0: int) -> ContactGraph:
+        """One induced intra-plane window of orbit ``l`` (LRU-cached
+        gathers of the compiled full window at ``i0``)."""
+        key = (l, i0)
         sub = self._orbit_graphs.get(key)
         if sub is None:
-            sub = subgraph(g, self.constellation._orbit_table[l])
+            sub = subgraph(self._window_graph(i0),
+                           self.constellation._orbit_table[l])
             self._orbit_graphs[key] = sub
             if len(self._orbit_graphs) > 4 * self.cfg.num_orbits:
                 self._orbit_graphs.popitem(last=False)
         else:
             self._orbit_graphs.move_to_end(key)
+        return sub
+
+    def orbit_subgraph(self, l: int, t_s: float = 0.0) \
+            -> Union[ContactGraph, WindowedRouter]:
+        """Induced intra-plane contact graph of orbit ``l`` covering
+        ``t_s`` (cached): the ring members plus every intra-plane chord
+        with line of sight — the substrate of sink-election routing.
+        Past the grid byte budget this is a stitched sub-router whose
+        windows gather lazily from the full-shell windows."""
+        if self._window_steps >= len(self.grid_t):
+            return self._orbit_window(l, 0)
+        sub = self._orbit_routers.get(l)
+        if sub is None:
+            sub = WindowedRouter(
+                self.grid_t, self.cfg.sats_per_orbit, self._window_steps,
+                lambda i0, l=l: self._orbit_window(l, i0))
+            self._orbit_routers[l] = sub
         return sub
 
     def elect_sinks(self, t_s: float,

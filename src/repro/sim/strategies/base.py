@@ -215,7 +215,12 @@ class CycleStrategy(Strategy):
     global model the orbit last saw, trains all members, folds them
     along the Eq.-14 intra-plane chain, routes the folded model to a
     station (how is the subclass's :meth:`schedule_cycle`), and lands at
-    an absolute arrival time. ``step`` pops the earliest inflight
+    an absolute arrival time. All routed pricing goes through the
+    engine's stitched routing API (``elect_sinks`` /
+    ``station_upload_end`` / ``route_exit_end``), so cycle plans on
+    mega shells — where contact graphs are windowed under
+    ``SimConfig.isl_grid_max_bytes`` — are exact against the
+    whole-horizon oracle, window boundaries included. ``step`` pops the earliest inflight
     arrival, materializes the training it priced (one vmapped burst),
     hands the orbit model to the subclass's :meth:`fold` (immediate
     async fold vs buffer-then-flush), and relaunches the orbit's next

@@ -3,9 +3,11 @@ orbit models have arrived, staleness-discounted.
 
 Each orbit cycles independently (no round barrier): train from the
 global it last saw, fold the members along the Eq.-14 intra-plane chain
-into the orbit's elected sink (:meth:`RoundEngine.elect_sinks`), and
-upload at the sink's next station contact
-(:meth:`RoundEngine.station_upload_end`). The station folds each
+into the orbit's elected sink (:meth:`RoundEngine.elect_sinks` — the
+election routes over the intra-plane contact graph, stitched across
+windows on shells past the grid byte budget), and upload at the sink's
+next station contact (:meth:`RoundEngine.station_upload_end`, priced on
+the full-horizon contact tables). The station folds each
 arrival immediately:
 
     global <- (1 - rho) * global + rho * orbit_model,

@@ -4,11 +4,11 @@ dissemination through whichever satellite can exit first.
 Like ``fedhap_async``, every orbit cycles independently and folds its
 members along the Eq.-14 chain into its elected sink — but the folded
 model then rides the contact-graph router *cross-plane*
-(:func:`repro.orbits.routing.earliest_arrival` from the sink to every
-satellite) and exits through the satellite with the earliest completed
-station upload, not necessarily one of the orbit's own. The station
-buffers arrivals and flushes once ``buffer_fraction`` of the orbits have
-reported:
+(:meth:`RoundEngine.route_exit_end`: stitched earliest-arrival from the
+sink to every satellite, windows chained past the grid byte budget) and
+exits through the satellite with the earliest completed station upload,
+not necessarily one of the orbit's own. The station buffers arrivals
+and flushes once ``buffer_fraction`` of the orbits have reported:
 
     global <- (1 - sum rho_j) * global + sum_j rho_j * model_j,
     rho_j = (m_orbit_j / m_total) * staleness_discount(tag - base_tag_j)
@@ -24,7 +24,6 @@ import numpy as np
 
 from repro.core.treeops import tree_add, tree_scale
 from repro.core.weights import staleness_discount
-from repro.orbits.routing import earliest_arrival
 from repro.sim.strategies.base import (
     CycleStrategy,
     RunState,
@@ -70,12 +69,10 @@ class FedHapBuffered(CycleStrategy):
             return None
         # Route the folded model from the sink to EVERY satellite and
         # exit through the earliest completed station upload (the sink
-        # itself is a zero-hop candidate: arr[sink] == delivery).
-        graph = eng.contact_graph(float(el.delivery[0]))
-        arr = earliest_arrival(graph, [int(el.sinks[0])],
-                               float(el.delivery[0]))[0]
-        end = float(np.min(eng.station_upload_end(
-            np.arange(eng.n_sats), arr)))
+        # itself is a zero-hop candidate: arr[sink] == delivery). The
+        # engine stitches the sweep across contact-graph windows, so
+        # exits landing past a window boundary still price correctly.
+        end = eng.route_exit_end(int(el.sinks[0]), float(el.delivery[0]))
         if not np.isfinite(end):
             return None
         return end, el.lam[0]

@@ -69,6 +69,24 @@ class TestGeometryBench:
         assert row["batched_s"] > 0 and row["reference_s"] > 0
         assert row["reachable_frac"] > 0
 
+    def test_stitched_sweep_row_checks_oracle(self):
+        row = bench_geometry.bench_stitched_sweep(
+            (2, 6), horizon_h=6.0, step_s=120.0, rounds=4, n_sources=3)
+        assert row["windows"] >= 3          # forced window chain
+        assert row["oracle_build_s"] > 0 and row["stitched_cold_s"] > 0
+        assert row["sched_rounds"] >= 1 and row["sched_rps"] > 0
+
+    def test_check_regression_guards_stitched_rate(self):
+        from benchmarks import check_regression
+        doc = {"routing": {"stitched_sweep": [
+            {"shell": "20x40", "sched_rps": 10.0}]}}
+        base = check_regression._rate_metrics(doc)
+        assert base == {"routing.stitched_sweep[20x40].sched_rps": 10.0}
+        slow = {"routing": {"stitched_sweep": [
+            {"shell": "20x40", "sched_rps": 3.0}]}}
+        assert check_regression.check(doc, slow, 0.30)
+        assert not check_regression.check(doc, doc, 0.30)
+
     @pytest.mark.slow
     def test_smoke_tier_writes_full_schema(self, tmp_path):
         doc = bench_geometry.run(smoke=True)
@@ -78,6 +96,8 @@ class TestGeometryBench:
         assert all(r["speedup"] > 0 for r in doc["grid_build"])
         assert all(r["rounds_per_sec"] > 0 for r in doc["sweep"])
         assert doc["routing"]["async_sweep"]["async_rps"] > 0
+        assert all(r["sched_rps"] > 0 and r["windows"] >= 3
+                   for r in doc["routing"]["stitched_sweep"])
         assert {r["strategy"] for r in doc["sim_fused"]} == {
             "fedhap", "fedhap_async", "fedhap_buffered"}
         assert all(r["fused_rps"] > 0 and r["per_round_rps"] > 0

@@ -122,6 +122,63 @@ class TestEarliestArrival:
         assert (arr_sub >= arr_full[members] - 1e-9).all()
 
 
+class TestSettledEpsilon:
+    def test_converged_tables_settle_every_reachable_label(
+            self, paper_graph):
+        _, g = paper_graph
+        arr = earliest_arrival(g, [0], 123.0)
+        pred = predecessors(g, [0], arr)
+        reachable = np.isfinite(arr[0]) & (np.arange(g.n_sats) != 0)
+        assert reachable.any()
+        assert (pred[0][reachable] >= 0).all()
+
+    def test_boundary_label_between_epsilons_reads_unsettled(
+            self, paper_graph):
+        """Regression: `predecessors` used a loose 1e-6 settle tolerance
+        while `earliest_arrival` converges on _EPS_S = 1e-9. A label
+        3e-8 better than anything achievable sits between the two: the
+        old check blessed it with a predecessor whose replay misses the
+        claimed arrival; unified on _EPS_S it reads unsettled (-1)."""
+        _, g = paper_graph
+        arr = earliest_arrival(g, [0], 123.0)
+        dst = int(np.flatnonzero(
+            np.isfinite(arr[0]) & (np.arange(g.n_sats) != 0))[0])
+        assert predecessors(g, [0], arr)[0][dst] >= 0
+        arr_bad = arr.copy()
+        arr_bad[0, dst] -= 3e-8
+        assert predecessors(g, [0], arr_bad)[0][dst] == -1
+
+
+class TestInt16Sentinel:
+    def test_next_contact_table_exact_at_int16_max(self):
+        from repro.orbits import next_contact_table
+        T = int(np.iinfo(np.int16).max)          # sentinel == 32767 fits
+        nxt = next_contact_table(np.zeros((1, T), dtype=bool),
+                                 dtype=np.int16)
+        assert nxt.dtype == np.int16
+        assert (nxt == T).all()
+
+    def test_build_contact_graph_int16_at_32767_steps(self):
+        """The edge table stores len(grid_t) + 1 distinct values
+        (0..T with T the no-contact sentinel), so int16 is good through
+        exactly T = 32767 — the old guard widened (and the table
+        builder raised) one step early."""
+        T = int(np.iinfo(np.int16).max)
+        grid_t = np.arange(T) * 60.0
+        pos = np.zeros((2, T, 3))
+        pos[:, :, 0] = 8.0e6                      # both well above LEO
+        pos[1, :, 1] = 1.0e6                      # short clear chord
+        g = build_contact_graph(None, grid_t, N_PARAMS, positions=pos)
+        assert g.edge_next.dtype == np.int16
+        assert (g.edge_next[0, 1] == np.arange(T)).all()   # always up
+        assert (g.edge_next[0, 0] == T).all()              # sentinel ok
+        # one step past the boundary the table widens to int32
+        g2 = build_contact_graph(
+            None, np.arange(T + 1) * 60.0, N_PARAMS,
+            positions=np.broadcast_to(pos[:, :1], (2, T + 1, 3)).copy())
+        assert g2.edge_next.dtype == np.int32
+
+
 class TestSinkElection:
     def test_exit_cost_drives_election(self, paper_graph):
         con, g = paper_graph
@@ -179,14 +236,18 @@ class TestEngineRoutingCaches:
         assert g1 is g2                  # paper scale: one horizon graph
         assert g1.n_steps == len(eng.grid_t)
 
-    def test_windowed_graphs_past_budget(self, eng):
+    def test_windowed_router_past_budget(self, eng):
         import dataclasses
+        from repro.orbits.routing import WindowedRouter
         from repro.sim import SatcomSimulator
         small = SatcomSimulator(dataclasses.replace(
             eng.cfg, isl_grid_max_bytes=40 * 40 * 6 * 64))
-        g0 = small.contact_graph(0.0)
+        router = small.contact_graph(0.0)
+        assert isinstance(router, WindowedRouter)
+        assert small.contact_graph(100.0) is router   # one router, reused
+        g0 = router.window_covering(0.0)
         assert g0.n_steps < len(small.grid_t)
-        g_late = small.contact_graph(float(small.grid_t[-1]))
+        g_late = router.window_covering(float(small.grid_t[-1]))
         assert g_late.grid_t[-1] == small.grid_t[-1]
         # window contents match the full-horizon graph slice
         full = eng.contact_graph(0.0)
@@ -194,6 +255,28 @@ class TestEngineRoutingCaches:
         np.testing.assert_array_equal(
             g_late.isl_vis,
             full.isl_vis[:, :, i0:i0 + g_late.n_steps])
+
+    def test_contact_graph_cache_evicts_lru(self, eng):
+        """SimConfig.contact_graph_cache bounds the compiled-window LRU
+        (mirroring delay_column_cache): oldest-touched window evicted."""
+        import dataclasses
+        from repro.sim import SatcomSimulator
+        small = SatcomSimulator(dataclasses.replace(
+            eng.cfg, isl_grid_max_bytes=1, contact_graph_cache=2))
+        router = small.contact_graph(0.0)
+        starts = router.window_starts(0.0)
+        assert len(starts) > 3
+        router.window(starts[0])
+        router.window(starts[1])
+        assert set(small._contact_graphs) == {starts[0], starts[1]}
+        router.window(starts[2])
+        assert starts[0] not in small._contact_graphs
+        assert len(small._contact_graphs) == 2
+        # touching an entry refreshes it: starts[1] survives, starts[2]
+        # becomes the eviction victim
+        router.window(starts[1])
+        router.window(starts[3])
+        assert set(small._contact_graphs) == {starts[1], starts[3]}
 
     def test_station_upload_end_manual(self, eng):
         """Batched exit pricing == next-contact scan + shl_delay."""
