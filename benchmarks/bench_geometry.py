@@ -19,7 +19,10 @@ Four sections, all recorded to ``BENCH_sim.json`` (schema documented in
   ``fedhap_async`` event loop vs fedhap rounds, and the stitched
   windowed router vs the single-graph oracle on mega shells
   (``stitched_sweep``: build/route costs checked allclose + buffered
-  scheduling events/s over the window chain).
+  scheduling events/s over the window chain), and a Starlink-scale
+  ``mega_sweep`` (72x22): dense all-pairs window build vs the sparse
+  intra-plane CSR table, frontier earliest-arrival, and run-batched
+  buffered scheduling events/s.
 - **sim_fused** — the fused plan-ahead driver vs the per-round /
   per-event reference loop (local SGD excluded) for fedhap,
   fedhap_async, and fedhap_buffered on the paper 5x8 shell and a 10x20
@@ -37,6 +40,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import pathlib
 import time
@@ -260,6 +264,81 @@ def bench_stitched_sweep(shell: tuple[int, int], horizon_h: float,
     }
 
 
+def bench_mega_sweep(shell: tuple[int, int], horizon_h: float,
+                     step_s: float = 60.0, events: int = 30,
+                     n_sources: int = 4) -> dict:
+    """Starlink-scale routed scheduling on one shell: dense all-pairs
+    window build vs the sparse intra-plane CSR build (the table the
+    batched sink election actually routes), sparse-frontier
+    earliest-arrival over the dense window, and the scheduling-only
+    ``fedhap_buffered`` event throughput (run-batched plan loop: one
+    block-diagonal election + one multi-source exit sweep per run of
+    arrivals). Routed exit hop depth is recorded as a diagnostic."""
+    import dataclasses
+
+    from repro.sim.strategies import get_strategy
+    S = shell[0] * shell[1]
+    cfg = dataclasses.replace(
+        _scenario_cfg("two_hap", shell, horizon_h, step_s),
+        strategy="fedhap_buffered")
+    eng = RoundEngine(cfg)
+
+    t0 = time.perf_counter()
+    g_dense = eng._window_graph(0)
+    dense_build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g_csr = eng._intra_window(0)
+    csr_build_s = time.perf_counter() - t0
+    dense_mb = (g_dense.isl_vis.nbytes + g_dense.edge_next.nbytes) / 2**20
+    csr_mb = (g_csr.nbr_vis.nbytes + g_csr.nbr_next.nbytes) / 2**20
+
+    srcs = np.linspace(0, S - 1, n_sources).astype(np.int64)
+    t0 = time.perf_counter()
+    arr = earliest_arrival(g_dense, srcs, 0.0)
+    route_s = time.perf_counter() - t0
+
+    strat = get_strategy("fedhap_buffered")()
+
+    def drive():
+        st = strat.init_plan_state(eng, 0.0)
+        n = 0
+        while n < events:
+            evs = strat.plan_events(eng, st, events - n)
+            if not evs:
+                break
+            n += len(evs)
+        return n
+
+    drive()                       # warm the window + election caches
+    eng._sink_cache.clear()       # time steady-state pricing, not memo hits
+    t0 = time.perf_counter()
+    n = drive()
+    sched_s = time.perf_counter() - t0
+
+    nl = min(4, shell[0])
+    el = eng.elect_sinks_batch(range(nl), [eng.train_time()] * nl)
+    hops = []
+    for sk, dv in zip(el.sinks, el.delivery):
+        if np.isfinite(dv):
+            _, _, hop = eng.route_exit_plan(int(sk), float(dv))
+            hops.append(max(0, len(hop) - 1))
+    return {
+        "shell": f"{shell[0]}x{shell[1]}", "n_sats": S,
+        "T": len(eng.grid_t), "horizon_h": horizon_h,
+        "window_steps": eng._window_steps,
+        "dense_build_s": round(dense_build_s, 4),
+        "csr_build_s": round(csr_build_s, 4),
+        "dense_mb": round(dense_mb, 1),
+        "csr_mb": round(csr_mb, 2),
+        "csr_edges": int(g_csr.n_edges),
+        "route_s": round(route_s, 4),
+        "reachable_frac": round(float(np.isfinite(arr).mean()), 4),
+        "sched_events": n,
+        "sched_eps": round(n / sched_s, 2),
+        "exit_hops_mean": round(float(np.mean(hops)), 2) if hops else None,
+    }
+
+
 def bench_async_sweep(rounds: int, horizon_h: float = 168.0) -> dict:
     """Scheduling-only fedhap_async event throughput vs fedhap rounds on
     the paper 5x8 shell (same engine, same exclusion of local SGD)."""
@@ -285,12 +364,16 @@ def bench_routing(smoke: bool) -> dict:
         sweep_rounds, sweep_horizon = 20, 72.0
         stitched_shells = [((6, 10), 6.0)]
         stitched_rounds = 10
+        mega_shells = [((8, 12), 2.0)]
+        mega_events = 6
     else:
         build_shells = [((5, 8), 12.0), ((10, 20), 6.0), ((20, 40), 2.0)]
         ea_kw = dict(horizon_h=6.0, n_ref_sources=4)
         sweep_rounds, sweep_horizon = 100, 168.0
         stitched_shells = [((10, 20), 6.0), ((20, 40), 2.0)]
         stitched_rounds = 20
+        mega_shells = [((72, 22), 2.0)]
+        mega_events = 30
 
     doc: dict = {"table_build": []}
     for shell, horizon_h in build_shells:
@@ -319,6 +402,20 @@ def bench_routing(smoke: bool) -> dict:
               f"cold {row['stitched_cold_s']:.2f}s / warm "
               f"{row['stitched_warm_s']:.3f}s (allclose), buffered "
               f"{row['sched_rps']:.1f} events/s", flush=True)
+    doc["mega_sweep"] = []
+    for shell, horizon_h in mega_shells:
+        # The stitched engines just above are reference cycles (router
+        # builder closures point back at the engine), so their GB-scale
+        # window/delay tables survive scope exit until the cycle
+        # collector runs — reclaim them before timing Starlink scale.
+        gc.collect()
+        row = bench_mega_sweep(shell, horizon_h, 60.0, events=mega_events)
+        doc["mega_sweep"].append(row)
+        print(f"routing.mega_sweep[{row['shell']}]: dense window "
+              f"{row['dense_build_s']:.2f}s ({row['dense_mb']:.0f} MB) vs "
+              f"CSR {row['csr_build_s']:.2f}s ({row['csr_mb']:.1f} MB, "
+              f"{row['csr_edges']} edges), route {row['route_s']:.3f}s, "
+              f"buffered {row['sched_eps']:.1f} events/s", flush=True)
     return doc
 
 
@@ -423,8 +520,13 @@ def run(smoke: bool = False, sim_wallclock: bool = False,
           f"({r['speedup']:.0f}x)", flush=True)
 
     doc["routing"] = bench_routing(smoke)
+    # The routing tier holds multi-hundred-MB window/delay tables alive
+    # until its engines die; reclaim them so the later sections measure
+    # steady-state throughput, not allocator pressure.
+    gc.collect()
 
     doc["sim_fused"] = bench_sim_fused(smoke)
+    gc.collect()
 
     doc["sweep"] = bench_sweep(sweep_scenarios, horizon_h, step_s,
                                rounds=sweep_rounds)

@@ -2,18 +2,28 @@
 
 Compares a freshly measured benchmark document against the committed
 baseline and fails (exit 1) when any throughput metric present in BOTH
-documents dropped by more than the tolerance (default 30%, configurable
-via ``--tolerance`` or the ``REGRESSION_TOLERANCE`` env var). Run by
-the nightly CI job after the full ``bench_geometry`` tier.
+documents dropped by more than its tolerance. Run by the nightly CI
+job after the full ``bench_geometry`` tier.
 
 Only rate-type metrics are guarded (rounds/s, events/s, lookups are
 covered indirectly through them); absolute wall times are skipped —
 they shift with machine load, while the rates compared at 30% slack
 catch real algorithmic regressions.
 
+Tolerances are per-section: ``--tolerance`` is repeatable and accepts
+either a bare fraction (the default for every section) or
+``section=fraction``, where a section is any dotted metric-key prefix
+(``sweep``, ``sim_fused``, ``routing.stitched_sweep``,
+``routing.mega_sweep``, ...). The longest matching prefix wins, so
+noisy sections (the Starlink-scale ``routing.mega_sweep`` events/s
+runs few events per sample) can carry wider slack than the stable
+scheduler sweeps without loosening the whole guard. The bare default
+falls back to ``$REGRESSION_TOLERANCE`` or 0.30.
+
 Usage:
   python -m benchmarks.check_regression \\
-      --baseline BENCH_sim.baseline.json --fresh BENCH_sim.json
+      --baseline BENCH_sim.baseline.json --fresh BENCH_sim.json \\
+      --tolerance 0.30 --tolerance routing.mega_sweep=0.5
 """
 from __future__ import annotations
 
@@ -48,14 +58,43 @@ def _rate_metrics(doc: dict) -> dict[str, float]:
     for row in routing.get("stitched_sweep") or []:
         put(f"routing.stitched_sweep[{row['shell']}].sched_rps",
             row.get("sched_rps"))
+    for row in routing.get("mega_sweep") or []:
+        put(f"routing.mega_sweep[{row['shell']}].sched_eps",
+            row.get("sched_eps"))
     wall = doc.get("sim_wallclock") or {}
     if wall:
         put("sim_wallclock.engine_rps", wall.get("engine_rps"))
     return out
 
 
-def check(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
-    """Return a list of regression messages (empty = pass)."""
+def parse_tolerances(specs, env_default: float) -> dict[str, float]:
+    """``["0.3", "routing.mega_sweep=0.5", ...]`` -> {prefix: frac}.
+
+    The empty-string key is the global default; a bare fraction sets
+    it. Raises ValueError on malformed entries."""
+    tol = {"": env_default}
+    for spec in specs or []:
+        section, sep, val = spec.rpartition("=")
+        tol[section if sep else ""] = float(val)
+    return tol
+
+
+def tolerance_for(key: str, tol: dict[str, float]) -> float:
+    """Longest section prefix of ``key`` present in ``tol`` wins."""
+    best, frac = -1, tol[""]
+    for section, t in tol.items():
+        if section and key.startswith(section) and len(section) > best:
+            best, frac = len(section), t
+    return frac
+
+
+def check(baseline: dict, fresh: dict, tol) -> list[str]:
+    """Return a list of regression messages (empty = pass).
+
+    ``tol`` is a {section prefix: fraction} map (empty key = default)
+    or a bare fraction applied to every metric."""
+    if isinstance(tol, (int, float)):
+        tol = {"": float(tol)}
     if baseline.get("smoke") != fresh.get("smoke"):
         print("note: baseline/fresh were produced by different tiers "
               f"(smoke={baseline.get('smoke')} vs {fresh.get('smoke')}); "
@@ -67,10 +106,12 @@ def check(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
         if key not in new:
             print(f"  skip   {key}: not measured in fresh run")
             continue
+        tolerance = tolerance_for(key, tol)
         floor = base[key] * (1.0 - tolerance)
         verdict = "ok" if new[key] >= floor else "REGRESSED"
         print(f"  {verdict:9s}{key}: {new[key]:.2f} vs baseline "
-              f"{base[key]:.2f} (floor {floor:.2f})")
+              f"{base[key]:.2f} (floor {floor:.2f}, "
+              f"tol {tolerance:.0%})")
         if new[key] < floor:
             failures.append(
                 f"{key}: {new[key]:.2f} < {floor:.2f} "
@@ -84,24 +125,27 @@ def main() -> None:
                     help="committed BENCH_sim.json to compare against")
     ap.add_argument("--fresh", required=True,
                     help="freshly measured BENCH_sim.json")
-    ap.add_argument("--tolerance", type=float,
-                    default=float(os.environ.get("REGRESSION_TOLERANCE",
-                                                 0.30)),
-                    help="allowed fractional drop (default 0.30 or "
-                         "$REGRESSION_TOLERANCE)")
+    ap.add_argument("--tolerance", action="append", default=None,
+                    metavar="[SECTION=]FRAC",
+                    help="allowed fractional drop; bare FRAC sets the "
+                         "default (else $REGRESSION_TOLERANCE or 0.30), "
+                         "SECTION=FRAC overrides one metric-key prefix; "
+                         "repeatable, longest prefix wins")
     args = ap.parse_args()
+    tol = parse_tolerances(
+        args.tolerance,
+        float(os.environ.get("REGRESSION_TOLERANCE", 0.30)))
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    failures = check(baseline, fresh, args.tolerance)
+    failures = check(baseline, fresh, tol)
     if failures:
         print("\nperf regression detected:", file=sys.stderr)
         for msg in failures:
             print(f"  {msg}", file=sys.stderr)
         sys.exit(1)
-    print("\nno perf regressions beyond tolerance "
-          f"({args.tolerance:.0%})")
+    print("\nno perf regressions beyond tolerance")
 
 
 if __name__ == "__main__":

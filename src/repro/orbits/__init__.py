@@ -39,6 +39,7 @@ from repro.orbits.visibility import (
     elevation_angle_deg,
     is_visible,
     isl_mask_from_positions,
+    isl_pairs_visible,
     iter_distance_chunks,
     mask_from_positions,
     next_contact_table,
@@ -53,12 +54,15 @@ from repro.orbits.visibility import (
 from repro.orbits.routing import (
     ContactGraph,
     SinkElection,
+    SparseContactGraph,
     WindowedRouter,
     build_contact_graph,
     earliest_arrival,
+    earliest_arrival_dense,
     earliest_arrival_reference,
     elect_sinks,
     extract_path,
+    extract_paths,
     predecessors,
 )
 from repro.orbits.links import (
@@ -79,15 +83,16 @@ __all__ = [
     "ephemeris_positions_eci", "orbital_period_s", "orbital_speed_ms",
     "station_positions_eci",
     "Station", "effective_min_elevation_deg", "elevation_angle_deg",
-    "is_visible", "isl_mask_from_positions", "iter_distance_chunks",
+    "is_visible", "isl_mask_from_positions", "isl_pairs_visible",
+    "iter_distance_chunks",
     "mask_from_positions", "next_contact_table",
     "sat_sat_visibility_mask", "sat_sat_visible", "stations_eci",
     "visibility_mask", "visibility_mask_pairwise", "visibility_windows",
     "windows_from_mask",
-    "ContactGraph", "SinkElection", "WindowedRouter",
-    "build_contact_graph", "earliest_arrival",
+    "ContactGraph", "SinkElection", "SparseContactGraph", "WindowedRouter",
+    "build_contact_graph", "earliest_arrival", "earliest_arrival_dense",
     "earliest_arrival_reference", "elect_sinks",
-    "extract_path", "predecessors",
+    "extract_path", "extract_paths", "predecessors",
     "FSO_DEFAULTS", "RF_DEFAULTS", "FsoLinkParams", "RfLinkParams",
     "fso_channel_gain", "fso_snr", "link_delay_s", "model_transfer_delay_s",
     "rf_snr", "shannon_rate_bps",

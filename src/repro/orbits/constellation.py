@@ -194,6 +194,39 @@ class WalkerConstellation:
         k = (sat.slot + direction) % self.sats_per_orbit
         return self.satellites[self._orbit_table[sat.orbit, k]]
 
+    def same_plane_mask(self) -> np.ndarray:
+        """``(S, S)`` bool locality mask of intra-plane ISL candidates:
+        True where two *distinct* satellites share an orbital plane. The
+        block-diagonal structure this induces on a contact graph (one
+        ``k x k`` block per orbit, no cross-plane edges) is what lets
+        sink elections route every orbit at once over one sparse graph
+        — ``E = L*k^2`` candidate pairs instead of ``S^2``."""
+        ids = np.arange(len(self))
+        same = (ids[:, None] // self.sats_per_orbit
+                == ids[None, :] // self.sats_per_orbit)
+        same[ids, ids] = False
+        return same
+
+    def local_neighbor_mask(self, ring_hops: int = 2,
+                            plane_hops: int = 1) -> np.ndarray:
+        """``(S, S)`` bool ring/grid locality mask: True for pairs within
+        ``ring_hops`` slots on the same plane or on planes within
+        ``plane_hops`` (cyclic in both axes) at any slot — the classic
+        +grid ISL neighborhood. A *candidate* filter for top-k CSR
+        builds on shells where hardware limits ISL reach; the default
+        simulator keeps the lossless any-contact adjacency instead."""
+        ids = np.arange(len(self))
+        orb = ids // self.sats_per_orbit
+        slot = ids % self.sats_per_orbit
+        dorb = np.abs(orb[:, None] - orb[None, :])
+        dorb = np.minimum(dorb, self.num_orbits - dorb)
+        dslot = np.abs(slot[:, None] - slot[None, :])
+        dslot = np.minimum(dslot, self.sats_per_orbit - dslot)
+        near = ((dorb == 0) & (dslot <= ring_hops)) | \
+            ((dorb > 0) & (dorb <= plane_hops))
+        near[ids, ids] = False
+        return near
+
     def positions_eci(self, t_s: float | np.ndarray) -> np.ndarray:
         """Positions of every satellite; shape (n_sats, ...t, 3).
 

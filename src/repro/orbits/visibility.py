@@ -330,6 +330,34 @@ def isl_mask_from_positions(
     return out
 
 
+def isl_pairs_visible(
+    pos: np.ndarray,
+    a_ids: np.ndarray,
+    b_ids: np.ndarray,
+    grazing_altitude_m: float = 80_000.0,
+) -> np.ndarray:
+    """LoS series of an explicit ISL pair list (the sparse counterpart of
+    :func:`isl_mask_from_positions`): ``pos`` is the stacked ``(S, T, 3)``
+    ephemeris, ``a_ids``/``b_ids`` are ``(E,)`` satellite ids; returns
+    ``(E, T)`` bool. Evaluated in cache-sized time chunks of the same
+    elementwise :func:`sat_sat_visible` test the dense grid build runs,
+    so masked CSR contact-graph builds are bit-equal to gathering the
+    dense grid at the same pairs — only the pairs a locality mask keeps
+    (e.g. intra-plane chords) are ever touched.
+    """
+    a_ids = np.asarray(a_ids, dtype=np.int64)
+    b_ids = np.asarray(b_ids, dtype=np.int64)
+    E, T = len(a_ids), pos.shape[1]
+    out = np.empty((E, T), dtype=bool)
+    chunk = max(1, (1 << 25) // max(1, E * 3 * 8))
+    for i in range(0, T, chunk):
+        sl = slice(i, min(i + chunk, T))
+        out[:, sl] = sat_sat_visible(
+            pos[a_ids, sl, :], pos[b_ids, sl, :], grazing_altitude_m)
+    out[a_ids == b_ids] = False
+    return out
+
+
 def sat_sat_visibility_mask(
     constellation: WalkerConstellation,
     t_s: float | np.ndarray,

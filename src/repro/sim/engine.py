@@ -39,11 +39,17 @@ Architecture (see also ``repro.core.strategies``):
     :meth:`RoundEngine.contact_graph` (one time-expanded contact graph
     over the all-pairs ISL LoS grid when it fits the byte budget, a
     stitched :class:`~repro.orbits.routing.WindowedRouter` over
-    LRU-cached half-overlapping windows past it — exact either way) and
-    :meth:`RoundEngine.elect_sinks` (memoized per-orbit sink elections);
+    LRU-cached half-overlapping windows past it, advanced incrementally
+    — overlapping LoS columns are reused, only the tail is recomputed —
+    exact either way) and :meth:`RoundEngine.elect_sinks` /
+    :meth:`RoundEngine.elect_sinks_batch` (memoized sink elections, all
+    cache-missing (orbit, t) rows scored by ONE vectorized election
+    over the sparse block-diagonal intra-plane CSR graph,
+    :meth:`RoundEngine.intra_plane_graph`);
     :meth:`RoundEngine.station_upload_end` prices whole batches of
     routed exits (next station contact + SHL transfer) in one gather,
-    and :meth:`RoundEngine.route_exit_end` the cross-plane routed exit.
+    and :meth:`RoundEngine.route_exit_ends` the cross-plane routed
+    exits — one multi-source stitched sweep per batch.
 
 - Strategies (fedhap | fedisl | fedisl_ideal | fedsat | fedspace |
   fedsink | fedhap_async | fedhap_buffered) are small registered classes
@@ -82,11 +88,14 @@ from repro.orbits import (
 from repro.orbits.routing import (
     ContactGraph,
     SinkElection,
+    SparseContactGraph,
     WindowedRouter,
     build_contact_graph,
     earliest_arrival,
     elect_sinks,
+    extract_paths,
     onehot_chain_weights,
+    predecessors,
     subgraph,
 )
 from repro.orbits.visibility import DALLAS, ROLLA
@@ -268,7 +277,13 @@ class RoundEngine:
         self._sat_pos = sat_pos                             # (S, T, 3)
         self._contact_graphs: OrderedDict[int, ContactGraph] = OrderedDict()
         self._orbit_graphs: OrderedDict[Any, ContactGraph] = OrderedDict()
+        self._intra_graphs: OrderedDict[int, SparseContactGraph] = \
+            OrderedDict()
         self._sink_cache: OrderedDict[Any, SinkElection] = OrderedDict()
+        # Intra-plane locality mask: the CSR candidate filter that turns
+        # election routing into L independent k x k blocks (E = L*k^2
+        # candidate pairs instead of S^2) relaxed in ONE call.
+        self._same_plane = self.constellation.same_plane_mask()
         # Window length (grid steps) of one compiled contact graph under
         # the byte budget; the whole horizon when it fits. Windows stay
         # under the int16 sentinel so the edge table never silently
@@ -279,6 +294,7 @@ class RoundEngine:
             cfg.isl_grid_max_bytes // max(1, per_step))))
         self._router: Optional[WindowedRouter] = None
         self._orbit_routers: dict[int, WindowedRouter] = {}
+        self._intra_router: Optional[WindowedRouter] = None
         self._onehot_lam = onehot_chain_weights(
             self.sizes.reshape(L, k), cfg.partial_mode)     # (L, k, k)
 
@@ -446,12 +462,29 @@ class RoundEngine:
         return np.where(ok, tt, np.nan)
 
     # ----------------------------------------------- routing subsystem
+    @staticmethod
+    def _find_reuse(cache: OrderedDict, i0: int):
+        """The cached window with the largest head overlap into a new
+        window at ``i0`` — the incremental-advance donor
+        (``build_contact_graph(reuse=...)``). None when no cached window
+        starts at or before ``i0`` and reaches past it."""
+        best, best_ov = None, 0
+        for p0, g in cache.items():
+            if p0 <= i0:
+                ov = p0 + g.n_steps - i0
+                if ov > best_ov:
+                    best, best_ov = g, ov
+        return best
+
     def _window_graph(self, i0: int) -> ContactGraph:
         """Compile (or fetch) the contact-graph window starting at grid
         index ``i0``, memoized in an LRU of
         ``SimConfig.contact_graph_cache`` windows (mirrors the lazy
         delay-column cache: stitched sweeps revisit neighboring windows,
-        eviction drops the least-recently routed one)."""
+        eviction drops the least-recently routed one). A miss advances
+        incrementally from the cached window with the largest overlap —
+        the stitched chain steps by half a window, so typically only
+        half the LoS geometry is ever recomputed (bit-equal either way)."""
         graph = self._contact_graphs.get(i0)
         if graph is None:
             sl = slice(i0, min(i0 + self._window_steps, len(self.grid_t)))
@@ -459,7 +492,8 @@ class RoundEngine:
                 self.constellation, self.grid_t[sl],
                 self.model_bits // 32,
                 grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
-                positions=self._sat_pos[:, sl])
+                positions=self._sat_pos[:, sl],
+                reuse=self._find_reuse(self._contact_graphs, i0))
             self._contact_graphs[i0] = graph
             if len(self._contact_graphs) > max(1,
                                                self.cfg.contact_graph_cache):
@@ -467,6 +501,48 @@ class RoundEngine:
         else:
             self._contact_graphs.move_to_end(i0)
         return graph
+
+    def _intra_window(self, i0: int) -> SparseContactGraph:
+        """One CSR *intra-plane* window at grid index ``i0``: the
+        block-diagonal contact graph over the same-plane candidate
+        pairs only (``E = L*k^2`` instead of ``S^2``), LRU-cached and
+        incrementally advanced like the full windows. Disjoint blocks
+        relax independently, so routing global member ids over this
+        graph is bit-equal to routing each orbit's induced subgraph —
+        which is what lets one relaxation score a whole batch of sink
+        elections."""
+        graph = self._intra_graphs.get(i0)
+        if graph is None:
+            sl = slice(i0, min(i0 + self._window_steps, len(self.grid_t)))
+            graph = build_contact_graph(
+                self.constellation, self.grid_t[sl],
+                self.model_bits // 32,
+                grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
+                positions=self._sat_pos[:, sl],
+                sparse=True, pair_mask=self._same_plane,
+                reuse=self._find_reuse(self._intra_graphs, i0))
+            self._intra_graphs[i0] = graph
+            if len(self._intra_graphs) > max(1,
+                                             self.cfg.contact_graph_cache):
+                self._intra_graphs.popitem(last=False)
+        else:
+            self._intra_graphs.move_to_end(i0)
+        return graph
+
+    def intra_plane_graph(self, t_s: float = 0.0) \
+            -> Union[SparseContactGraph, WindowedRouter]:
+        """The block-diagonal intra-plane routing substrate covering
+        ``t_s``: one CSR graph when a window spans the horizon, else a
+        stitched router over the LRU-cached intra windows (the election
+        path cuts its chain once the member columns settle — see
+        :func:`repro.orbits.routing.elect_sinks`)."""
+        if self._window_steps >= len(self.grid_t):
+            return self._intra_window(0)
+        if self._intra_router is None:
+            self._intra_router = WindowedRouter(
+                self.grid_t, self.n_sats, self._window_steps,
+                self._intra_window)
+        return self._intra_router
 
     def contact_graph(self, t_s: float = 0.0) -> Union[ContactGraph,
                                                        WindowedRouter]:
@@ -506,15 +582,71 @@ class RoundEngine:
     def route_exit_end(self, sat_idx: int, t_s: float) -> float:
         """Earliest completed station upload reachable from ``sat_idx``
         holding a model at ``t_s``, allowed to ride cross-plane ISL
-        routes: one (stitched) earliest-arrival sweep to every satellite
-        plus one batched exit-pricing gather
-        (:meth:`station_upload_end`) over the landings — the routed
-        exit decision behind ``fedhap_buffered``. Returns inf when no
+        routes — the routed exit decision behind ``fedhap_buffered``;
+        the scalar form of :meth:`route_exit_ends`. Returns inf when no
         route completes before the horizon."""
+        return float(self.route_exit_ends([int(sat_idx)], [t_s])[0])
+
+    def route_exit_ends(self, sat_idx, t_s) -> np.ndarray:
+        """Batched routed exits: ``(N,)`` earliest completed station
+        uploads of models held at satellites ``sat_idx`` from times
+        ``t_s`` (per-row). One shared frontier-masked earliest-arrival
+        sweep over all rows plus one exit-pricing gather
+        (:meth:`station_upload_end`) over the landings — the whole
+        batch of a plan block's exit decisions in one relaxation. The
+        sweep is bound-pruned (``cap``): a label at or past its row's
+        current best upload end cannot seed a better exit (arrivals
+        propagate monotonically and upload ends never precede
+        arrival), so the frontier collapses to the labels that can
+        still matter — exact for the returned ends. On a stitched
+        router the chain is additionally cut (``stop``) as soon as
+        every row's best exit already beats the next window's start:
+        any later candidate lands at or after that start, so its
+        upload ends no earlier. Rows with non-finite ``t_s`` price
+        inf."""
+        sats = np.atleast_1d(np.asarray(sat_idx, dtype=np.int64))
+        ts = np.atleast_1d(np.asarray(t_s, dtype=np.float64))
+        ends = np.full(len(sats), np.inf)
+        ok = np.isfinite(ts)
+        if not ok.any():
+            return ends
+        sats, tv = sats[ok], ts[ok]
+        graph = self.contact_graph(float(tv.min()))
+        allsat = np.arange(self.n_sats)[None, :]
+
+        def best_ends(a: np.ndarray) -> np.ndarray:
+            return self.station_upload_end(allsat, a).min(axis=1)
+
+        if isinstance(graph, WindowedRouter):
+            def exits_settled(a: np.ndarray, t_next: float) -> bool:
+                best = best_ends(a)
+                return bool(np.all(np.isfinite(best) & (best <= t_next)))
+
+            arr = graph.earliest_arrival(sats, tv, stop=exits_settled,
+                                         cap=best_ends)
+        else:
+            arr = earliest_arrival(graph, sats, tv, cap=best_ends)
+        ends[ok] = best_ends(arr)
+        return ends
+
+    def route_exit_plan(self, sat_idx: int,
+                        t_s: float) -> tuple[float, int, list[int]]:
+        """The routed exit of :meth:`route_exit_end` *with its path*:
+        ``(end, exit_sat, hops)`` where ``hops`` is the ISL hop list
+        from ``sat_idx`` to the exit satellite (``[]`` when no route
+        completes). One stitched sweep, one spliced predecessor table,
+        one vectorized ``extract_paths`` walk — the diagnostic behind
+        the mega-shell benches' hop-count reporting."""
         graph = self.contact_graph(float(t_s))
-        arr = earliest_arrival(graph, [int(sat_idx)], float(t_s))[0]
-        return float(np.min(self.station_upload_end(
-            np.arange(self.n_sats), arr)))
+        arr = earliest_arrival(graph, [int(sat_idx)], float(t_s))
+        ends = self.station_upload_end(np.arange(self.n_sats), arr[0])
+        exit_sat = int(np.argmin(ends))
+        end = float(ends[exit_sat])
+        if not np.isfinite(end):
+            return end, -1, []
+        pred = predecessors(graph, [int(sat_idx)], arr)
+        hops = extract_paths(pred, [int(sat_idx)], [exit_sat])[0, 0]
+        return end, exit_sat, [int(h) for h in hops[hops >= 0]]
 
     def station_upload_end(self, sat_idx, t_s) -> np.ndarray:
         """Earliest completion of an upload from satellite(s) ready at
@@ -571,22 +703,104 @@ class RoundEngine:
             self._orbit_routers[l] = sub
         return sub
 
+    def _sink_cache_put(self, key: Any, el: SinkElection) -> None:
+        self._sink_cache[key] = el
+        if len(self._sink_cache) > 1024:
+            self._sink_cache.popitem(last=False)
+
+    def _elect_rows(self, ls, ts) -> list[SinkElection]:
+        """Per-(orbit, time) election rows for a batch of cycle events:
+        cache-hit rows come from the sink cache, every miss is scored in
+        ONE :func:`repro.orbits.routing.elect_sinks` call over the
+        block-diagonal intra-plane graph (global member ids, per-orbit
+        ``t0`` vector) — the batched plan-phase path. Disjoint blocks
+        relax independently, so each returned row is bit-equal to the
+        orbit's own induced-subgraph election."""
+        cfg = self.cfg
+        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        table = self.constellation._orbit_table
+        out: list[Optional[SinkElection]] = [None] * len(ls)
+        miss: dict[tuple, list[int]] = {}
+        for i, (l, t) in enumerate(zip(ls, ts)):
+            key = ((int(l),), round(float(t), 6))
+            el = self._sink_cache.get(key)
+            if el is not None:
+                self._sink_cache.move_to_end(key)
+                out[i] = el
+            else:
+                miss.setdefault(key, []).append(i)
+        if miss:
+            keys = list(miss)
+            ml = [key[0][0] for key in keys]
+            mt = np.array([float(ts[miss[key][0]]) for key in keys])
+            members = table[ml]                              # (M, k)
+            sizes = self.sizes.reshape(L, k)[ml]
+
+            def exit_cost(mem, ready):
+                # contact wait + SHL from the candidate's own delivery
+                # time (the delivery delta itself is already in the
+                # chain-weighted arrival-delay term of the score).
+                ok = np.isfinite(ready)
+                rf = np.where(ok, ready, 0.0)
+                end = self.station_upload_end(mem, rf)
+                return np.where(ok, end - rf, np.inf)
+
+            el = elect_sinks(
+                self.intra_plane_graph(float(mt.min())), members, sizes,
+                mt, exit_cost, cfg.partial_mode,
+                lam=self._onehot_lam[ml])
+            for j, key in enumerate(keys):
+                row = SinkElection(
+                    sinks=el.sinks[j:j + 1],
+                    sink_slots=el.sink_slots[j:j + 1],
+                    scores=el.scores[j:j + 1],
+                    lam=el.lam[j:j + 1],
+                    delivery=el.delivery[j:j + 1],
+                    all_scores=el.all_scores[j:j + 1])
+                self._sink_cache_put(key, row)
+                for i in miss[key]:
+                    out[i] = row
+        return out
+
+    @staticmethod
+    def _concat_elections(rows) -> SinkElection:
+        return SinkElection(
+            sinks=np.concatenate([r.sinks for r in rows]),
+            sink_slots=np.concatenate([r.sink_slots for r in rows]),
+            scores=np.concatenate([r.scores for r in rows]),
+            lam=np.concatenate([r.lam for r in rows]),
+            delivery=np.concatenate([r.delivery for r in rows]),
+            all_scores=np.concatenate([r.all_scores for r in rows]),
+        )
+
+    def elect_sinks_batch(self, orbits, ts) -> SinkElection:
+        """Sink elections for a *batch* of cycle events — orbit ``i``
+        ready at ``ts[i]`` — scored in one vectorized call over the
+        block-diagonal intra-plane graph (cache-missing rows only);
+        the known remaining host cost of the async/buffered plan phase.
+        Rows concatenate in event order; ``sinks`` are global ids."""
+        rows = self._elect_rows([int(l) for l in orbits],
+                                [float(t) for t in ts])
+        return self._concat_elections(rows)
+
     def elect_sinks(self, t_s: float,
                     orbits: Optional[Any] = None) -> SinkElection:
         """Per-orbit sink election at ``t_s`` (memoized — the sink cache).
 
         Scores every orbit member by Eq.-14-chain-weighted *intra-plane*
-        routed arrival delay (the orbit's induced contact subgraph,
-        :meth:`orbit_subgraph`) plus its station exit cost — priced by
+        routed arrival delay plus its station exit cost — priced by
         :meth:`station_upload_end` at each candidate's own delivery
         time, so a contact window that closes while the chain is still
         folding never wins an election — and elects the argmin; see
-        :func:`repro.orbits.routing.elect_sinks`. ``orbits`` restricts
-        the election (e.g. one orbit of an async cycle); default all.
-        Returned ``sinks`` are global satellite ids.
+        :func:`repro.orbits.routing.elect_sinks`. All selected orbits
+        are scored by one vectorized call over the block-diagonal
+        intra-plane graph (:meth:`intra_plane_graph`) — bit-equal to
+        routing each orbit's induced subgraph (:meth:`orbit_subgraph`,
+        the blocks are disjoint) with the per-orbit Python eliminated.
+        ``orbits`` restricts the election (e.g. one orbit of an async
+        cycle); default all. Returned ``sinks`` are global ids.
         """
-        cfg = self.cfg
-        L, k = cfg.num_orbits, cfg.sats_per_orbit
+        L = self.cfg.num_orbits
         sel = tuple(range(L)) if orbits is None \
             else tuple(int(x) for x in orbits)
         key = (sel, round(float(t_s), 6))
@@ -594,38 +808,9 @@ class RoundEngine:
         if el is not None:
             self._sink_cache.move_to_end(key)
             return el
-        table = self.constellation._orbit_table
-        members = table[list(sel)]                             # (L', k)
-        sizes = self.sizes.reshape(L, k)
-        locals_ = np.arange(k)[None, :]
-
-        def exit_cost(loc, ready, l):
-            # contact wait + SHL from the candidate's own delivery time
-            # (the delivery delta itself is already in the chain-weighted
-            # arrival-delay term of the score).
-            end = self.station_upload_end(table[l][loc], ready)
-            return np.where(np.isfinite(ready), end - ready, np.inf)
-
-        parts = [
-            elect_sinks(
-                self.orbit_subgraph(l, t_s), locals_, sizes[l][None],
-                float(t_s),
-                lambda loc, ready, l=l: exit_cost(loc, ready, l),
-                cfg.partial_mode, lam=self._onehot_lam[l][None])
-            for l in sel
-        ]
-        el = SinkElection(
-            sinks=np.array([members[i, p.sink_slots[0]]
-                            for i, p in enumerate(parts)]),
-            sink_slots=np.concatenate([p.sink_slots for p in parts]),
-            scores=np.concatenate([p.scores for p in parts]),
-            lam=np.concatenate([p.lam for p in parts]),
-            delivery=np.concatenate([p.delivery for p in parts]),
-            all_scores=np.concatenate([p.all_scores for p in parts]),
-        )
-        self._sink_cache[key] = el
-        if len(self._sink_cache) > 1024:
-            self._sink_cache.popitem(last=False)
+        el = self._concat_elections(
+            self._elect_rows(list(sel), [float(t_s)] * len(sel)))
+        self._sink_cache_put(key, el)
         return el
 
     # ------------------------------------------------- training/agg ops

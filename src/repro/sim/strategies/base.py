@@ -248,6 +248,16 @@ class CycleStrategy(Strategy):
         """
         raise NotImplementedError
 
+    def schedule_cycle_batch(self, eng: Any, ls, ts) -> list:
+        """Price a batch of cycles — orbit ``ls[i]`` starting at
+        ``ts[i]`` — returning one :meth:`schedule_cycle` result
+        (``(arrival, lam)`` or None) per entry. The default loops the
+        scalar hook; strategies whose pricing is pure routing (sink
+        election + exit pricing) override it with one vectorized
+        engine call over the block-diagonal intra-plane graph."""
+        return [self.schedule_cycle(eng, int(l), float(t))
+                for l, t in zip(ls, ts)]
+
     def fold(self, eng: Any, s: RunState, l: int, orbit_model: Any,
              base_tag: int) -> None:
         """Absorb one arrived orbit model into the global state.
@@ -304,21 +314,32 @@ class CycleStrategy(Strategy):
         return True
 
     # ---------------------------------------------------- fused driver
-    def _plan_launch(self, eng: Any, st: dict, l: int, t: float) -> None:
-        nxt = self.schedule_cycle(eng, l, t)
-        if nxt is None or nxt[0] > eng.horizon_s:
+    def _plan_launch_batch(self, eng: Any, st: dict, batch) -> None:
+        """Relaunch a batch of popped cycles. ``batch`` rows are
+        ``(l, t, tag)`` — orbit, pop time, and the plan tag recorded
+        right after that event's own fold (later batch members fold
+        before earlier members' relaunches, so the launch-time tag must
+        be snapshotted per event, not read at relaunch). One
+        :meth:`schedule_cycle_batch` call prices the whole batch."""
+        if not batch:
             return
-        st["inflight"][l] = nxt
-        st["base_tag"][l] = st["tag"]
+        nxts = self.schedule_cycle_batch(
+            eng, [l for l, _, _ in batch], [t for _, t, _ in batch])
+        for (l, _, tag), nxt in zip(batch, nxts):
+            if nxt is None or nxt[0] > eng.horizon_s:
+                continue
+            st["inflight"][l] = nxt
+            st["base_tag"][l] = tag
 
     def init_plan_state(self, eng: Any, t: float) -> dict:
         """Plan-side event-loop state: inflight cycle schedule plus the
         tag/buffer bookkeeping mirrored from the reference ``scratch``.
-        Launches every orbit's first cycle from ``t``."""
+        Launches every orbit's first cycle from ``t`` (one batched
+        pricing call)."""
         st = {"inflight": {}, "base_tag": {}, "tag": 0, "fill": 0,
               "meta": []}
-        for l in range(eng.cfg.num_orbits):
-            self._plan_launch(eng, st, l, t)
+        self._plan_launch_batch(
+            eng, st, [(l, float(t), 0) for l in range(eng.cfg.num_orbits)])
         return st
 
     def plan_events(self, eng: Any, st: dict, n_max: int,
@@ -326,20 +347,36 @@ class CycleStrategy(Strategy):
         """Plan up to ``n_max`` cycle events ahead: pop arrivals in
         order, price each fold (:meth:`plan_fold`), and relaunch the
         orbit's next cycle — the reference event loop minus the
-        training. Stops early once ``max_folds`` aggregation events
+        training. Pops run-batched: a cycle relaunched from a pop at
+        time ``a`` lands at ``>= a + train_time``, so every pending
+        arrival strictly below ``min(pending) + train_time`` pops
+        before any relaunch of this batch can — the whole run is
+        popped first and its relaunches priced in one
+        :meth:`schedule_cycle_batch` call, preserving the reference
+        event order (ties break on dict insertion order, identical in
+        both loops). Stops early once ``max_folds`` aggregation events
         have been planned. Shared by :meth:`run_fused` and the
         wallclock benches (``benchmarks.sim_wallclock``)."""
         events, folds = [], 0
         while (len(events) < n_max and st["inflight"]
                and (max_folds is None or folds < max_folds)):
-            l = min(st["inflight"], key=lambda x: st["inflight"][x][0])
-            arrival, lam = st["inflight"].pop(l)
-            e = self.plan_fold(eng, st, l)
-            e.update(l=l, lam=np.asarray(lam, dtype=np.float64),
-                     t=float(arrival), do_eval=False)
-            folds += e["folds"]
-            events.append(e)
-            self._plan_launch(eng, st, l, float(arrival))
+            bound = (min(a for a, _ in st["inflight"].values())
+                     + eng.train_time())
+            batch = []
+            while (st["inflight"] and len(events) < n_max
+                   and (max_folds is None or folds < max_folds)):
+                l = min(st["inflight"], key=lambda x: st["inflight"][x][0])
+                arrival, lam = st["inflight"][l]
+                if batch and float(arrival) >= bound:
+                    break
+                st["inflight"].pop(l)
+                e = self.plan_fold(eng, st, l)
+                e.update(l=l, lam=np.asarray(lam, dtype=np.float64),
+                         t=float(arrival), do_eval=False)
+                folds += e["folds"]
+                events.append(e)
+                batch.append((l, float(arrival), st["tag"]))
+            self._plan_launch_batch(eng, st, batch)
         return events
 
     def run_fused(self, eng: Any, s: RunState) -> None:

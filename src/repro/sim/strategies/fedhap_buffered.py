@@ -77,6 +77,24 @@ class FedHapBuffered(CycleStrategy):
             return None
         return end, el.lam[0]
 
+    def schedule_cycle_batch(self, eng: Any, ls, ts) -> list:
+        """Batched pricing: one sink election over the block-diagonal
+        intra-plane graph for the whole run
+        (:meth:`RoundEngine.elect_sinks_batch`), then ONE multi-source
+        cross-plane exit sweep for every elected sink
+        (:meth:`RoundEngine.route_exit_ends` — per-source start times,
+        a single frontier relaxation) — bit-equal to looping
+        :meth:`schedule_cycle` (shared per-(orbit, t) sink cache)."""
+        t0 = np.asarray(ts, dtype=np.float64) + eng.train_time()
+        el = eng.elect_sinks_batch(ls, t0)
+        ok = np.isfinite(el.scores)
+        ends = np.full(len(ls), np.inf)
+        if ok.any():
+            ends[ok] = eng.route_exit_ends(el.sinks[ok], el.delivery[ok])
+        return [(float(ends[i]), el.lam[i])
+                if ok[i] and np.isfinite(ends[i]) else None
+                for i in range(len(ls))]
+
     def fold(self, eng: Any, s: RunState, l: int, orbit_model: Any,
              base_tag: int) -> None:
         cfg = eng.cfg

@@ -7,11 +7,14 @@ aggregate reachability score — the Eq.-14-chain-weighted routed arrival
 delay of its members' models plus the candidate's station exit cost
 (wait for its next contact + SHL transfer); see
 :meth:`repro.sim.engine.RoundEngine.elect_sinks` /
-:func:`repro.orbits.routing.elect_sinks`. Member arrivals route over
-the orbit's induced contact graph — stitched across windows on shells
-past ``SimConfig.isl_grid_max_bytes`` — and exits are priced on the
-full-horizon contact tables, so mega-shell elections match the
-single-graph oracle exactly. All members train, their
+:func:`repro.orbits.routing.elect_sinks`. All orbits are scored by ONE
+vectorized election over the sparse block-diagonal *intra-plane*
+contact graph (CSR edge tables, stitched across windows on shells past
+``SimConfig.isl_grid_max_bytes``) — disjoint blocks relax
+independently, so the batched call is bit-equal to routing each
+orbit's induced subgraph — and exits are priced on the full-horizon
+contact tables, so mega-shell elections match the single-graph oracle
+exactly. All members train, their
 models fold along the closed-form intra-plane chain into the sink, and
 the round completes when the slowest orbit's sink finishes its upload.
 Weighting: Eq. 14-16 with exactly one visible satellite (the sink) per

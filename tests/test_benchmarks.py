@@ -87,6 +87,37 @@ class TestGeometryBench:
         assert check_regression.check(doc, slow, 0.30)
         assert not check_regression.check(doc, doc, 0.30)
 
+    def test_check_regression_mega_sweep_section_tolerance(self):
+        from benchmarks import check_regression
+        doc = {"routing": {"mega_sweep": [
+            {"shell": "72x22", "sched_eps": 20.0}]}}
+        base = check_regression._rate_metrics(doc)
+        assert base == {"routing.mega_sweep[72x22].sched_eps": 20.0}
+        slow = {"routing": {"mega_sweep": [
+            {"shell": "72x22", "sched_eps": 12.0}]}}
+        # 40% drop: fails at the default tolerance, passes once the
+        # mega_sweep section carries wider slack.
+        assert check_regression.check(doc, slow, 0.30)
+        tol = check_regression.parse_tolerances(
+            ["routing.mega_sweep=0.5"], 0.30)
+        assert tol == {"": 0.30, "routing.mega_sweep": 0.5}
+        assert not check_regression.check(doc, slow, tol)
+        key = "routing.mega_sweep[72x22].sched_eps"
+        assert check_regression.tolerance_for(key, tol) == 0.5
+        assert check_regression.tolerance_for("sweep[x].r", tol) == 0.30
+        # longest matching prefix wins
+        tol2 = check_regression.parse_tolerances(
+            ["routing=0.1", "routing.mega_sweep=0.5"], 0.30)
+        assert check_regression.tolerance_for(key, tol2) == 0.5
+
+    def test_mega_sweep_row_well_formed(self):
+        row = bench_geometry.bench_mega_sweep(
+            (2, 6), horizon_h=6.0, step_s=120.0, events=3, n_sources=3)
+        assert row["n_sats"] == 12 and row["T"] > 0
+        assert row["dense_build_s"] > 0 and row["csr_build_s"] > 0
+        assert row["csr_edges"] > 0 and row["csr_mb"] <= row["dense_mb"]
+        assert row["sched_events"] >= 1 and row["sched_eps"] > 0
+
     @pytest.mark.slow
     def test_smoke_tier_writes_full_schema(self, tmp_path):
         doc = bench_geometry.run(smoke=True)
@@ -98,6 +129,8 @@ class TestGeometryBench:
         assert doc["routing"]["async_sweep"]["async_rps"] > 0
         assert all(r["sched_rps"] > 0 and r["windows"] >= 3
                    for r in doc["routing"]["stitched_sweep"])
+        assert all(r["sched_eps"] > 0 and r["csr_edges"] > 0
+                   for r in doc["routing"]["mega_sweep"])
         assert {r["strategy"] for r in doc["sim_fused"]} == {
             "fedhap", "fedhap_async", "fedhap_buffered"}
         assert all(r["fused_rps"] > 0 and r["per_round_rps"] > 0

@@ -1,0 +1,272 @@
+"""Sparse frontier routing: CSR edge tables vs the retained dense
+oracle, incremental window reuse, batched path extraction, and the
+batched election/exit engine paths — all exactness (bit-equality)
+checks, deterministic plus hypothesis properties when installed."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.orbits import WalkerConstellation
+from repro.orbits.routing import (
+    SparseContactGraph,
+    build_contact_graph,
+    earliest_arrival,
+    earliest_arrival_dense,
+    earliest_arrival_reference,
+    extract_path,
+    extract_paths,
+    predecessors,
+    subgraph,
+)
+
+N_PARAMS = 100_000
+
+
+def _grid(hours=2.0, step=120.0):
+    return np.arange(0.0, hours * 3600, step)
+
+
+def _pair(n_orbits, k, hours=2.0, step=120.0):
+    con = WalkerConstellation(n_orbits, k)
+    ts = _grid(hours, step)
+    dense = build_contact_graph(con, ts, N_PARAMS)
+    sparse = build_contact_graph(con, ts, N_PARAMS, sparse=True)
+    return con, dense, sparse
+
+
+def _inf_to_big(a):
+    return np.where(np.isfinite(a), a, 1e18)
+
+
+def _check_bitmatch(dense, sparse, t0):
+    """Frontier-dense == full dense relaxation == CSR, bit for bit,
+    and allclose to the per-edge Python reference."""
+    S = dense.n_sats
+    srcs = np.arange(S)
+    arr_f = earliest_arrival(dense, srcs, t0)      # frontier, dense table
+    arr_o = earliest_arrival_dense(dense, srcs, t0)  # full relaxation
+    arr_c = earliest_arrival(sparse, srcs, t0)     # frontier, CSR table
+    assert np.array_equal(arr_f, arr_o)
+    assert np.array_equal(arr_c, arr_o)
+    for s in (0, S // 2):
+        ref = earliest_arrival_reference(dense, s, t0)
+        np.testing.assert_allclose(_inf_to_big(arr_f[s]),
+                                   _inf_to_big(ref),
+                                   rtol=1e-9, atol=1e-6)
+
+
+class TestCsrBitmatch:
+    @pytest.mark.parametrize("shell,t0", [((2, 4), 0.0), ((3, 5), 240.0),
+                                          ((4, 6), 1000.0)])
+    def test_csr_matches_dense_and_reference(self, shell, t0):
+        _, dense, sparse = _pair(*shell)
+        _check_bitmatch(dense, sparse, t0)
+
+    def test_csr_stores_only_contact_pairs(self):
+        _, dense, sparse = _pair(3, 5)
+        assert isinstance(sparse, SparseContactGraph)
+        S = dense.n_sats
+        assert sparse.n_edges == int(dense.isl_vis.any(axis=2).sum())
+        assert sparse.n_edges < S * S - S or S <= 2
+        # densified CSR views reproduce the dense tables exactly
+        assert np.array_equal(sparse.isl_vis, dense.isl_vis)
+        assert np.array_equal(sparse.edge_next, dense.edge_next)
+
+    def test_monotone_in_t0(self):
+        _, dense, sparse = _pair(3, 5)
+        S = dense.n_sats
+        srcs = np.arange(S)
+        prev = earliest_arrival(sparse, srcs, 0.0)
+        for t0 in (300.0, 900.0, 2400.0):
+            arr = earliest_arrival(sparse, srcs, t0)
+            assert (_inf_to_big(arr) >= _inf_to_big(prev) - 1e-9).all()
+            prev = arr
+
+    def test_vector_t0_matches_scalar_runs(self):
+        _, dense, sparse = _pair(3, 5)
+        srcs = np.array([0, 4, 9, 14])
+        t0v = np.array([0.0, 120.0, 600.0, 60.0])
+        for g in (dense, sparse):
+            arr = earliest_arrival(g, srcs, t0v)
+            for i, (s, t0) in enumerate(zip(srcs, t0v)):
+                one = earliest_arrival(g, [int(s)], float(t0))[0]
+                assert np.array_equal(arr[i], one)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n_orbits=st.integers(2, 4), k=st.integers(3, 6),
+           t0=st.floats(0.0, 3600.0, allow_nan=False))
+    def test_property_csr_bitmatches_dense(self, n_orbits, k, t0):
+        """ISSUE acceptance property: on random small shells the CSR
+        frontier arrivals bit-match the dense relaxation and stay
+        allclose to the per-edge reference."""
+        _, dense, sparse = _pair(n_orbits, k, hours=1.0)
+        _check_bitmatch(dense, sparse, float(t0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(n_orbits=st.integers(2, 4), k=st.integers(3, 6),
+           t0=st.floats(0.0, 1800.0, allow_nan=False),
+           dt=st.floats(0.0, 1800.0, allow_nan=False))
+    def test_property_monotone_in_t0(self, n_orbits, k, t0, dt):
+        """Later departure never yields an earlier arrival."""
+        _, _, sparse = _pair(n_orbits, k, hours=1.0)
+        srcs = np.arange(sparse.n_sats)
+        a0 = earliest_arrival(sparse, srcs, float(t0))
+        a1 = earliest_arrival(sparse, srcs, float(t0 + dt))
+        assert (_inf_to_big(a1) >= _inf_to_big(a0) - 1e-9).all()
+
+
+class TestBatchedPaths:
+    def test_extract_paths_matches_scalar_loop(self):
+        _, dense, sparse = _pair(3, 5)
+        S = dense.n_sats
+        srcs = [0, 6, 11]
+        for g in (dense, sparse):
+            arr = earliest_arrival(g, srcs, 0.0)
+            pred = predecessors(g, srcs, arr)
+            paths = extract_paths(pred, srcs)
+            assert paths.shape[:2] == (len(srcs), S)
+            for i, s in enumerate(srcs):
+                for d in range(S):
+                    ref = extract_path(pred[i], s, d)
+                    got = [int(x) for x in paths[i, d] if x >= 0]
+                    assert got == ref, (s, d)
+
+    def test_csr_predecessors_match_dense(self):
+        _, dense, sparse = _pair(3, 5)
+        srcs = [0, 7]
+        arr = earliest_arrival(dense, srcs, 0.0)
+        pd = predecessors(dense, srcs, arr)
+        ps = predecessors(sparse, srcs, arr)
+        assert np.array_equal(pd, ps)
+
+
+class TestIncrementalReuse:
+    @pytest.mark.parametrize("sparse", [False, True])
+    def test_window_advance_bitequal_to_fresh(self, sparse):
+        con = WalkerConstellation(3, 5)
+        ts = _grid(hours=3.0)
+        W, off = 40, 25                   # 15-step overlap
+        prev = build_contact_graph(con, ts[:W], N_PARAMS, sparse=sparse)
+        fresh = build_contact_graph(con, ts[off:off + W], N_PARAMS,
+                                    sparse=sparse)
+        adv = build_contact_graph(con, ts[off:off + W], N_PARAMS,
+                                  sparse=sparse, reuse=prev)
+        assert np.array_equal(adv.grid_t, fresh.grid_t)
+        assert np.array_equal(adv.positions, fresh.positions)
+        assert np.array_equal(adv.isl_vis, fresh.isl_vis)
+        assert np.array_equal(adv.edge_next, fresh.edge_next)
+
+    def test_masked_window_advance_bitequal(self):
+        con = WalkerConstellation(3, 5)
+        mask = con.same_plane_mask()
+        ts = _grid(hours=3.0)
+        W, off = 40, 25
+        prev = build_contact_graph(con, ts[:W], N_PARAMS, sparse=True,
+                                   pair_mask=mask)
+        fresh = build_contact_graph(con, ts[off:off + W], N_PARAMS,
+                                    sparse=True, pair_mask=mask)
+        adv = build_contact_graph(con, ts[off:off + W], N_PARAMS,
+                                  sparse=True, pair_mask=mask, reuse=prev)
+        assert np.array_equal(adv.nbr_ptr, fresh.nbr_ptr)
+        assert np.array_equal(adv.nbr_ids, fresh.nbr_ids)
+        assert np.array_equal(adv.nbr_vis, fresh.nbr_vis)
+        assert np.array_equal(adv.nbr_next, fresh.nbr_next)
+
+    def test_disjoint_reuse_falls_back_to_fresh(self):
+        con = WalkerConstellation(2, 4)
+        ts = _grid(hours=3.0)
+        prev = build_contact_graph(con, ts[:30], N_PARAMS)
+        adv = build_contact_graph(con, ts[60:90], N_PARAMS, reuse=prev)
+        fresh = build_contact_graph(con, ts[60:90], N_PARAMS)
+        assert np.array_equal(adv.isl_vis, fresh.isl_vis)
+
+
+class TestBlockDiagonalIntraPlane:
+    def test_blockdiag_matches_induced_subgraphs(self):
+        con = WalkerConstellation(3, 5)
+        ts = _grid(hours=2.0)
+        intra = build_contact_graph(con, ts, N_PARAMS, sparse=True,
+                                    pair_mask=con.same_plane_mask())
+        table = con._orbit_table
+        for l in range(3):
+            ids = table[l]
+            sub = subgraph(intra, ids)
+            arr_sub = earliest_arrival(sub, np.arange(len(ids)), 0.0)
+            arr_all = earliest_arrival(intra, ids, 0.0)
+            assert np.array_equal(arr_sub, arr_all[:, ids])
+            # cross-plane labels stay unreachable on the intra graph
+            other = np.setdiff1d(np.arange(len(con)), ids)
+            assert not np.isfinite(arr_all[:, other]).any()
+
+
+class TestEngineBatchedScheduling:
+    @pytest.fixture(scope="class")
+    def eng(self):
+        from repro.sim import SimConfig
+        from repro.sim.engine import RoundEngine
+        cfg = SimConfig(strategy="fedhap_buffered", stations="two_hap",
+                        num_orbits=3, sats_per_orbit=4, horizon_h=6.0,
+                        time_step_s=120.0, model_kind="mlp",
+                        num_samples=2000, eval_samples=200, iid=True)
+        return RoundEngine(cfg)
+
+    def test_elect_sinks_batch_matches_scalar(self, eng):
+        L = eng.cfg.num_orbits
+        ts = [1000.0, 250.0, 1000.0]
+        batch = eng.elect_sinks_batch(range(L), ts)
+        for l in range(L):
+            one = eng.elect_sinks(ts[l], orbits=(l,))
+            assert int(batch.sinks[l]) == int(one.sinks[0])
+            assert np.array_equal(batch.all_scores[l], one.all_scores[0])
+            assert np.array_equal(batch.lam[l], one.lam[0])
+            assert batch.delivery[l] == one.delivery[0]
+
+    def test_elect_sinks_all_orbits_matches_batch(self, eng):
+        L = eng.cfg.num_orbits
+        full = eng.elect_sinks(500.0)
+        batch = eng.elect_sinks_batch(range(L), [500.0] * L)
+        assert np.array_equal(full.sinks, batch.sinks)
+        assert np.array_equal(full.scores, batch.scores)
+
+    def test_route_exit_ends_matches_scalar(self, eng):
+        sats = [0, 5, 9, 11]
+        ts = [300.0, 900.0, 300.0, 4000.0]
+        ends = eng.route_exit_ends(sats, ts)
+        for s, t, e in zip(sats, ts, ends):
+            assert float(e) == eng.route_exit_end(s, t)
+
+    def test_route_exit_ends_bound_pruning_exact(self, eng):
+        # The cap hook prunes labels at/past each row's current best
+        # upload end; the returned ends must be bit-equal to a full
+        # uncapped relaxation over the same graph.
+        from repro.orbits.routing import earliest_arrival
+        sats = np.array([0, 3, 7, 10])
+        ts = np.array([200.0, 800.0, 200.0, 2500.0])
+        ends = eng.route_exit_ends(sats, ts)
+        graph = eng.contact_graph(float(ts.min()))
+        arr = earliest_arrival(graph, sats, ts)
+        allsat = np.arange(eng.n_sats)[None, :]
+        ref = eng.station_upload_end(allsat, arr).min(axis=1)
+        assert np.array_equal(ends, ref)
+
+    def test_route_exit_plan_consistent(self, eng):
+        end, exit_sat, hops = eng.route_exit_plan(2, 600.0)
+        assert np.isfinite(end)
+        assert hops[0] == 2 and hops[-1] == exit_sat
+        assert float(eng.route_exit_ends([2], [600.0])[0]) == end
+
+    def test_batched_schedule_cycle_matches_scalar(self, eng):
+        from repro.sim.strategies import get_strategy
+        for name in ("fedhap_async", "fedhap_buffered"):
+            strat = get_strategy(name)()
+            ls, ts = [0, 1, 2], [0.0, 400.0, 0.0]
+            batch = strat.schedule_cycle_batch(eng, ls, ts)
+            for l, t, got in zip(ls, ts, batch):
+                ref = strat.schedule_cycle(eng, l, t)
+                if ref is None:
+                    assert got is None
+                else:
+                    assert got[0] == ref[0]
+                    assert np.array_equal(got[1], ref[1])
