@@ -13,8 +13,8 @@ catch real algorithmic regressions.
 Tolerances are per-section: ``--tolerance`` is repeatable and accepts
 either a bare fraction (the default for every section) or
 ``section=fraction``, where a section is any dotted metric-key prefix
-(``sweep``, ``sim_fused``, ``routing.stitched_sweep``,
-``routing.mega_sweep``, ...). The longest matching prefix wins, so
+(``sweep``, ``sim_fused``, ``sim_sharded``,
+``routing.stitched_sweep``, ``routing.mega_sweep``, ...). The longest matching prefix wins, so
 noisy sections (the Starlink-scale ``routing.mega_sweep`` events/s
 runs few events per sample) can carry wider slack than the stable
 scheduler sweeps without loosening the whole guard. The bare default
@@ -48,6 +48,10 @@ def _rate_metrics(doc: dict) -> dict[str, float]:
         base = f"sim_fused[{row['strategy']} x {row['shell']}]"
         put(f"{base}.per_round_rps", row.get("per_round_rps"))
         put(f"{base}.fused_rps", row.get("fused_rps"))
+    for row in doc.get("sim_sharded") or []:
+        base = f"sim_sharded[{row['scenario']}]"
+        put(f"{base}.rps_1", row.get("rps_1"))
+        put(f"{base}.rps_sharded", row.get("rps_sharded"))
     routing = doc.get("routing") or {}
     sweep = routing.get("async_sweep") or {}
     if sweep:

@@ -21,6 +21,37 @@ class ConstellationMeshMap:
     sats_per_orbit: int = 4
     n_pods: int = 1
 
+    @classmethod
+    def from_constellation(cls, constellation,
+                           n_pods: int = 1) -> "ConstellationMeshMap":
+        """Mesh map derived from a simulator constellation (anything
+        exposing ``num_orbits`` / ``sats_per_orbit``, e.g.
+        :class:`repro.orbits.WalkerConstellation`) instead of the
+        hardcoded 4x4 default: each pod hosts a contiguous run of
+        ``num_orbits / n_pods`` planes."""
+        L = int(constellation.num_orbits)
+        k = int(constellation.sats_per_orbit)
+        if n_pods < 1 or L % n_pods:
+            raise ValueError(
+                f"cannot split {L} orbit planes over {n_pods} pods: "
+                f"each pod must host a whole number of planes")
+        return cls(n_orbits=L // n_pods, sats_per_orbit=k, n_pods=n_pods)
+
+    def validate_mesh(self, mesh) -> None:
+        """Raise ValueError when ``mesh`` cannot tile this constellation:
+        the ``data`` axis must hold exactly one satellite per device
+        (``sats_per_pod``) and the ``pod`` axis (when present) exactly
+        ``n_pods`` — the layout every ring/chain permutation assumes."""
+        shape = dict(mesh.shape)
+        data = int(shape.get("data", 0))
+        pods = int(shape.get("pod", 1))
+        if data != self.sats_per_pod or pods != self.n_pods:
+            raise ValueError(
+                f"mesh {dict(shape)} cannot tile constellation map "
+                f"{self.n_orbits}x{self.sats_per_orbit} x {self.n_pods} "
+                f"pod(s): need data={self.sats_per_pod}"
+                + (f", pod={self.n_pods}" if self.n_pods > 1 else ""))
+
     @property
     def sats_per_pod(self) -> int:
         return self.n_orbits * self.sats_per_orbit

@@ -41,6 +41,7 @@ from repro.core.dissemination import (
     hap_chain_up,
 )
 from repro.core.weights import chain_stats
+from repro.kernels.ops import fold_stacked_tree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +80,29 @@ def _squeeze0(tree):
 
 def _expand0(tree):
     return jax.tree.map(lambda x: x[None], tree)
+
+
+# ===================================================================
+def sharded_fold(stacked_local, weights_local, axes=("data",),
+                 use_pallas: Optional[bool] = None):
+    """The production round's collective aggregation tail, factored out
+    for any per-device satellite shard: a local weighted fold of the
+    ``(S_local, ...)`` stacked shard through the shared backend dispatch
+    (Pallas ``fedagg`` on accelerators, einsum ``tree_combine`` on CPU —
+    :func:`repro.kernels.ops.fold_stacked_tree`) followed by ONE weighted
+    ``psum`` over the mesh ``axes``. Must run inside ``shard_map``.
+
+    With one satellite per device (``S_local == 1``) this is exactly
+    ``fedhap_round_fused``'s ``contrib + psum`` tail (`_fused_body`);
+    with larger shards it is the simulator megastep's sharded fold
+    (:class:`repro.sim.executor.FusedExecutor`) — launch/ and sim/ share
+    this one code path. Zero-weight rows (padded dead satellites)
+    contribute exactly zero through both backends.
+    """
+    part = fold_stacked_tree(
+        jax.tree.map(lambda x: x.astype(jnp.float32), stacked_local),
+        weights_local, use_pallas)
+    return _tree_psum(part, axes)
 
 
 # ===================================================================
@@ -259,6 +283,7 @@ def build_round(
     optionally gives the trailing-dim PartitionSpec per leaf (tuples).
     """
     multi_pod = "pod" in mesh.axis_names
+    cfg.cmap.validate_mesh(mesh)
     pspecs = _specs_for(param_tree_example, cfg.cmap, multi_pod, model_specs)
     lead = ("pod", "data") if multi_pod else ("data",)
     scalar_spec = P(lead)
@@ -352,8 +377,9 @@ def _fused_body(w_shard, sizes_shard, visible_shard, cfg: FedRoundConfig,
     gate = jax.lax.psum(jnp.where(orbit_has_vis, 1.0, 0.0), axes) >= (
         jax.lax.psum(jnp.ones(()), axes) - 0.5)
 
-    contrib = _tree_scale(w, mu)
-    glob = _tree_psum(contrib, axes)
+    # The weighted-psum tail is the shared sharded fold (identical to the
+    # simulator megastep's per-shard aggregation, S_local == 1 here).
+    glob = sharded_fold(w_shard, mu[None], axes)
     new_w = jax.tree.map(
         lambda g, old: jnp.where(gate, g.astype(old.dtype), old), glob, w)
     stats = {

@@ -47,7 +47,36 @@ def fedagg_tree(params_stacked, weights):
     return jax.tree.unflatten(treedef, out)
 
 
-def fold_stacked_tree(params_stacked, weights, use_pallas: bool | None = None):
+def pad_stacked_rows(params_stacked, weights, multiple: int):
+    """Pad the leading (satellite) axis of a stacked tree + its weight
+    vector up to the next multiple of ``multiple`` with zero rows and
+    zero weights.
+
+    The contract that makes satellite-axis sharding correct for ANY
+    ``S``: a padded row is ``0.0 * 0.0`` through both fold backends
+    (Pallas ``fedagg`` mul+sum and the einsum dot), so it contributes
+    *exactly* zero to the aggregate — appending zero terms to an f32 sum
+    leaves every partial bit-identical. Device counts that do not divide
+    ``S`` therefore fold the same aggregate as the unpadded call. Safe
+    inside jit (the pad amount is static).
+    """
+    if multiple < 1:
+        raise ValueError(f"pad multiple must be >= 1, got {multiple}")
+    leaves = jax.tree.leaves(params_stacked)
+    s = leaves[0].shape[0]
+    pad = (-s) % multiple
+    if not pad:
+        return params_stacked, jnp.asarray(weights)
+    padded = jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]), params_stacked)
+    w = jnp.concatenate(
+        [jnp.asarray(weights), jnp.zeros(pad, jnp.asarray(weights).dtype)])
+    return padded, w
+
+
+def fold_stacked_tree(params_stacked, weights, use_pallas: bool | None = None,
+                      pad_to: int | None = None):
     """The simulator's weighted model fold: Σ_s weights[s]·stacked[s].
 
     Backend dispatch for the round megastep (``repro.sim.executor``): on
@@ -58,7 +87,15 @@ def fold_stacked_tree(params_stacked, weights, use_pallas: bool | None = None):
     the interpret-mode equivalence oracle (Pallas interpret mode is
     ~100x slower than the einsum and only exercised by the tests).
     Safe to call inside jit; ``use_pallas`` overrides the backend pick.
+
+    ``pad_to`` pads the satellite axis to the next multiple with
+    zero-weighted dead rows (:func:`pad_stacked_rows`) — the shard-ready
+    form for device counts that do not divide ``S``; exact through both
+    backends.
     """
+    if pad_to is not None:
+        params_stacked, weights = pad_stacked_rows(
+            params_stacked, weights, pad_to)
     if use_pallas is None:
         use_pallas = not _on_cpu()
     if use_pallas:

@@ -20,10 +20,38 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_constellation_map(*, multi_pod: bool = False) -> ConstellationMeshMap:
-    """DESIGN.md §8: 4 orbits x 4 satellites per pod, one HAP per pod."""
+def make_constellation_map(*, multi_pod: bool = False,
+                           constellation=None) -> ConstellationMeshMap:
+    """Mesh map of the constellation the round aggregates.
+
+    With ``constellation`` (e.g. the simulator's
+    :class:`repro.orbits.WalkerConstellation`) the map is derived from
+    its actual plane layout (`ConstellationMeshMap.from_constellation`);
+    without it, the DESIGN.md §8 production default: 4 orbits x 4
+    satellites per pod, one HAP per pod.
+    """
+    n_pods = 2 if multi_pod else 1
+    if constellation is not None:
+        return ConstellationMeshMap.from_constellation(
+            constellation, n_pods=n_pods)
     return ConstellationMeshMap(
-        n_orbits=4, sats_per_orbit=4, n_pods=2 if multi_pod else 1)
+        n_orbits=4, sats_per_orbit=4, n_pods=n_pods)
+
+
+def make_sim_mesh(n_data: int) -> Mesh:
+    """1-D ``("data",)`` satellite-sharding mesh for the simulator's
+    fused megastep (`repro.sim.executor.FusedExecutor`): ``n_data``
+    devices, each holding a contiguous shard of the stacked satellite
+    axis. Raises if the backend has fewer than ``n_data`` devices."""
+    if n_data < 1:
+        raise ValueError(f"need at least one device, got {n_data}")
+    if n_data > jax.device_count():
+        raise ValueError(
+            f"SimConfig requested {n_data} data shards but only "
+            f"{jax.device_count()} XLA device(s) are available "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before first jax use to force host devices)")
+    return jax.make_mesh((n_data,), ("data",))
 
 
 def make_debug_mesh(n_data: int = 4, n_model: int = 2,

@@ -26,11 +26,14 @@ strategies.
 from repro.orbits.constellation import (
     EARTH_RADIUS_M,
     MU_EARTH,
+    MultiShellConstellation,
     Satellite,
+    ShellSpec,
     WalkerConstellation,
     ephemeris_positions_eci,
     orbital_period_s,
     orbital_speed_ms,
+    parse_shells,
     station_positions_eci,
 )
 from repro.orbits.visibility import (
@@ -79,9 +82,10 @@ from repro.orbits.links import (
 )
 
 __all__ = [
-    "EARTH_RADIUS_M", "MU_EARTH", "Satellite", "WalkerConstellation",
+    "EARTH_RADIUS_M", "MU_EARTH", "MultiShellConstellation", "Satellite",
+    "ShellSpec", "WalkerConstellation",
     "ephemeris_positions_eci", "orbital_period_s", "orbital_speed_ms",
-    "station_positions_eci",
+    "parse_shells", "station_positions_eci",
     "Station", "effective_min_elevation_deg", "elevation_angle_deg",
     "is_visible", "isl_mask_from_positions", "isl_pairs_visible",
     "iter_distance_chunks",

@@ -156,14 +156,26 @@ class WalkerConstellation:
         self.raan = 2.0 * math.pi * orbit_idx / num_orbits
         self.phase = (2.0 * math.pi * slot_idx / sats_per_orbit
                       + 2.0 * math.pi * phasing_factor * orbit_idx / total)
+        self._finalize()
 
+    def _finalize(self) -> None:
+        """Build the per-object records and membership table from the
+        stacked ephemeris (shared with :class:`MultiShellConstellation`).
+
+        Requires ``num_orbits`` / ``sats_per_orbit`` and the four ``(S,)``
+        ephemeris arrays plus per-satellite altitudes (implied by
+        ``sma_m``) to be set; derives ``satellites`` and ``_orbit_table``.
+        """
+        total = self.num_orbits * self.sats_per_orbit
+        orbit_idx = np.arange(total) // self.sats_per_orbit
+        slot_idx = np.arange(total) % self.sats_per_orbit
         self.satellites: list[Satellite] = [
             Satellite(
                 sat_id=i,
                 orbit=int(orbit_idx[i]),
                 slot=int(slot_idx[i]),
-                altitude_m=altitude_m,
-                inclination_rad=self.inclination_rad,
+                altitude_m=float(self.sma_m[i]) - EARTH_RADIUS_M,
+                inclination_rad=float(self.inclination[i]),
                 raan_rad=float(self.raan[i]),
                 phase_rad=float(self.phase[i]),
             )
@@ -173,7 +185,7 @@ class WalkerConstellation:
         # satellite ids of plane l in slot order (orbit_members/ring_neighbor
         # used to rebuild an O(S) comprehension per call).
         self._orbit_table = np.arange(total).reshape(
-            num_orbits, sats_per_orbit)
+            self.num_orbits, self.sats_per_orbit)
 
     def __len__(self) -> int:
         return len(self.satellites)
@@ -245,6 +257,104 @@ class WalkerConstellation:
         pa = a.position_eci(t_s)
         pb = b.position_eci(t_s)
         return float(np.linalg.norm(pa - pb))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShellSpec:
+    """One altitude shell of a multi-shell constellation."""
+    num_orbits: int
+    sats_per_orbit: int
+    altitude_m: float
+    inclination_deg: float = 80.0
+    phasing_factor: int = 1
+
+
+def parse_shells(spec: str) -> list[ShellSpec]:
+    """Parse a ``shells:`` constellation spec into per-shell parameters.
+
+    Grammar (the constellation analogue of ``stations="grid:RxC"``)::
+
+        [shells:]LxK@ALT_KM[/INC_DEG][+LxK@ALT_KM[/INC_DEG]]...
+
+    e.g. ``shells:10x20@550+5x8@1200/60`` — a 10x20 shell at 550 km
+    (default 80 deg inclination) stacked with a 5x8 shell at 1200 km
+    inclined 60 deg. Every shell must share ``K`` (sats per orbit) so
+    the combined constellation keeps the rectangular ``(L_total, K)``
+    orbit table every scheduler reshape relies on.
+    """
+    body = spec.split(":", 1)[1] if spec.startswith("shells:") else spec
+    shells: list[ShellSpec] = []
+    try:
+        for part in body.split("+"):
+            lk, _, rest = part.partition("@")
+            if not rest:
+                raise ValueError("missing '@ALT_KM'")
+            l_str, _, k_str = lk.partition("x")
+            alt, _, inc = rest.partition("/")
+            shells.append(ShellSpec(
+                num_orbits=int(l_str), sats_per_orbit=int(k_str),
+                altitude_m=float(alt) * 1000.0,
+                inclination_deg=float(inc) if inc else 80.0))
+    except ValueError as e:
+        raise ValueError(
+            f"bad shells spec {spec!r}: expected "
+            f"'LxK@ALT_KM[/INC_DEG][+...]', e.g. "
+            f"'shells:10x20@550+5x8@1200/60' ({e})") from None
+    ks = {s.sats_per_orbit for s in shells}
+    if len(ks) != 1:
+        raise ValueError(
+            f"bad shells spec {spec!r}: all shells must share "
+            f"sats_per_orbit (got {sorted(ks)}) so the stacked "
+            f"constellation keeps a rectangular (L, K) orbit table")
+    if any(s.num_orbits < 1 or s.sats_per_orbit < 1 for s in shells):
+        raise ValueError(f"bad shells spec {spec!r}: empty shell")
+    return shells
+
+
+class MultiShellConstellation(WalkerConstellation):
+    """Two-plus Walker shells at different altitudes composed into ONE
+    stacked ephemeris (the dense-constellation regime of
+    arXiv:2111.12769).
+
+    Satellite ids concatenate shell by shell in plane-major order, so
+    ``num_orbits`` is the total plane count across shells and every
+    ``(L, K)`` reshape downstream (orbit tables, per-orbit visibility,
+    partitioners, mesh maps) works unchanged. Inter-shell ISLs need no
+    special casing: :func:`repro.orbits.visibility.sat_sat_visible` is
+    purely positional, so a cross-shell link whose chord grazes the
+    atmosphere below ``isl_grazing_altitude_m`` is pruned by the same
+    test that gates intra-shell links — the contact-graph path is
+    untouched.
+    """
+
+    def __init__(self, shells: "list[ShellSpec] | str") -> None:
+        if isinstance(shells, str):
+            shells = parse_shells(shells)
+        shells = list(shells)
+        if not shells:
+            raise ValueError("need at least one shell")
+        ks = {s.sats_per_orbit for s in shells}
+        if len(ks) != 1:
+            raise ValueError(
+                f"all shells must share sats_per_orbit (got {sorted(ks)})")
+        self.shells = tuple(shells)
+        subs = [WalkerConstellation(
+            s.num_orbits, s.sats_per_orbit, s.altitude_m,
+            s.inclination_deg, s.phasing_factor) for s in shells]
+        self.num_orbits = sum(s.num_orbits for s in shells)
+        self.sats_per_orbit = shells[0].sats_per_orbit
+        # Scalar attributes describe the FIRST shell (kept for API
+        # compatibility; per-satellite values live in the stacked arrays).
+        self.altitude_m = shells[0].altitude_m
+        self.inclination_rad = subs[0].inclination_rad
+        self.sma_m = np.concatenate([c.sma_m for c in subs])
+        self.inclination = np.concatenate([c.inclination for c in subs])
+        self.raan = np.concatenate([c.raan for c in subs])
+        self.phase = np.concatenate([c.phase for c in subs])
+        # shell_of[s] = which shell satellite s belongs to.
+        self.shell_of = np.repeat(np.arange(len(subs)),
+                                  [len(c) for c in subs])
+        self._finalize()
 
 
 def station_position_eci(

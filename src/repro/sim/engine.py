@@ -76,6 +76,7 @@ from repro.data import (
 )
 from repro.models import CNN, MLP
 from repro.orbits import (
+    MultiShellConstellation,
     Station,
     WalkerConstellation,
     effective_min_elevation_deg,
@@ -83,6 +84,7 @@ from repro.orbits import (
     mask_from_positions,
     model_transfer_delay_s,
     next_contact_table,
+    parse_shells,
     stations_eci,
 )
 from repro.orbits.routing import (
@@ -116,11 +118,20 @@ class SimConfig:
     # vs the per-round reference path (host-synced every round)
     fused: bool = True
     plan_block: int = 8
+    # multi-device execution: shard the fused megastep's satellite axis
+    # over `data_shards` devices (`repro.launch.mesh.make_sim_mesh`), or
+    # hand in a prebuilt Mesh with a "data" axis. 0/1 = single device.
+    data_shards: int = 0
+    mesh: Any = None
     # constellation (paper §IV-A)
     num_orbits: int = 5
     sats_per_orbit: int = 8
     altitude_m: float = 2_000_000.0
     inclination_deg: float = 80.0
+    # multi-shell constellation spec ("shells:LxK@ALT_KM[/INC]+...");
+    # when set, overrides num_orbits/sats_per_orbit/altitude_m with the
+    # stacked-shell layout (see repro.orbits.parse_shells)
+    shells: str = ""
     # training
     num_samples: int = 70_000
     local_steps: int = 54         # ~1 epoch of a 1750-sample shard @ bs 32
@@ -152,6 +163,22 @@ class SimConfig:
     # LRU capacity (in windows) of the compiled contact-graph cache,
     # mirroring delay_column_cache for the lazy delay path
     contact_graph_cache: int = 4
+
+    def __post_init__(self):
+        # `shells:` specs are the source of truth for the constellation
+        # layout: derive the plane counts here so every downstream
+        # consumer (partitioning, visibility reshapes, mesh maps) sees
+        # consistent num_orbits/sats_per_orbit without special-casing.
+        # dataclasses.replace re-runs this, keeping copies consistent.
+        if self.shells:
+            specs = parse_shells(self.shells)
+            object.__setattr__(
+                self, "num_orbits", sum(s.num_orbits for s in specs))
+            object.__setattr__(
+                self, "sats_per_orbit", specs[0].sats_per_orbit)
+            object.__setattr__(self, "altitude_m", specs[0].altitude_m)
+            object.__setattr__(
+                self, "inclination_deg", specs[0].inclination_deg)
 
 
 @dataclasses.dataclass
@@ -218,9 +245,12 @@ class RoundEngine:
 
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
-        self.constellation = WalkerConstellation(
-            cfg.num_orbits, cfg.sats_per_orbit, cfg.altitude_m,
-            cfg.inclination_deg)
+        if cfg.shells:
+            self.constellation = MultiShellConstellation(cfg.shells)
+        else:
+            self.constellation = WalkerConstellation(
+                cfg.num_orbits, cfg.sats_per_orbit, cfg.altitude_m,
+                cfg.inclination_deg)
         self.stations = _make_stations(cfg.stations)
         self.n_sats = len(self.constellation)
         rng = np.random.default_rng(cfg.seed)
@@ -318,8 +348,13 @@ class RoundEngine:
         programs the plan-ahead drivers dispatch to."""
         if self._executor is None:
             from repro.sim.executor import FusedExecutor
+            mesh = self.cfg.mesh
+            if mesh is None and self.cfg.data_shards > 1:
+                from repro.launch.mesh import make_sim_mesh
+                mesh = make_sim_mesh(self.cfg.data_shards)
             self._executor = FusedExecutor(
-                self.trainer, self.fd, self.eval_images, self.eval_labels)
+                self.trainer, self.fd, self.eval_images,
+                self.eval_labels, mesh=mesh)
         return self._executor
 
     def tidx(self, t_s) -> np.ndarray:

@@ -26,6 +26,27 @@ dispatch:
 
 Accuracies come back as one stacked transfer per block; rounds the plan
 marked invalid (padding) or non-eval are skipped via ``lax.cond``.
+
+**Multi-device execution** (``mesh=``): given a mesh with a ``data``
+axis (`repro.launch.mesh.make_sim_mesh` / ``make_debug_mesh``), the
+megastep is ``shard_map``-ped over the satellite axis: schedule and
+batch-index tensors shard their satellite dim over ``data``, the global
+model and eval set stay replicated, each device trains and folds only
+its own satellite shard, and the per-device partial folds meet in ONE
+weighted ``psum`` — :func:`repro.core.mesh_round.sharded_fold`, the
+production mesh round's own collective tail, so ``launch/`` and
+``sim/`` share one aggregation code path. Satellite counts that do not
+divide the device count are padded with zero-weight dead satellites
+(index rows 0, weight 0.0 — exactly-zero contribution through both
+fold backends), so weights and eval are unaffected. A 1-device mesh is
+bit-identical to the unsharded path; at D devices the psum reduction
+order differs from the single einsum by a few f32 ULPs (the documented
+fedagg-vs-einsum bound of ``tests/test_sim_fused.py``).
+
+The tick-driven fedsat/fedspace baselines keep the single-device path:
+their per-tick participant sets are small, data-dependent slices where
+resharding would dominate; their histories are mesh-independent by
+construction.
 """
 from __future__ import annotations
 
@@ -34,7 +55,10 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core.mesh_round import sharded_fold
 from repro.core.treeops import (
     tree_broadcast,
     tree_row,
@@ -62,11 +86,18 @@ class FusedExecutor:
 
     def __init__(self, trainer: Any, fd: Any, eval_images: np.ndarray,
                  eval_labels: np.ndarray, *, eval_chunk: int = 1024,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None, mesh: Any = None):
         self.trainer = trainer
         self._x = jnp.asarray(fd.images)
         self._y = jnp.asarray(np.asarray(fd.labels, np.int32))
         self.use_pallas = use_pallas
+        self.mesh = mesh
+        if mesh is not None and "data" not in mesh.axis_names:
+            raise ValueError(
+                f"executor mesh needs a 'data' axis to shard the "
+                f"satellite dim over; got axes {mesh.axis_names}")
+        self.n_shards = int(dict(mesh.shape)["data"]) if mesh is not None \
+            else 1
         self._jit = {}          # (kind, *shape key) -> compiled program
 
         # Eval set, padded to whole chunks; pad labels are -1 so they
@@ -87,6 +118,31 @@ class FusedExecutor:
     # ------------------------------------------------------------ basics
     def _fold(self, stacked: Any, weights: Any) -> Any:
         return fold_stacked_tree(stacked, weights, self.use_pallas)
+
+    def _replicate(self, tree: Any) -> Any:
+        """Commit a param tree replicated over the mesh (no-op without
+        one) so donated block inputs land pre-sharded."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    @staticmethod
+    def _pad_sat_axis(arrs: dict, names, axis: int, multiple: int) -> dict:
+        """Pad each named tensor's satellite ``axis`` up to a multiple of
+        the shard count with dead satellites: index tensors get row-0
+        indices (finite training input), weight tensors get 0.0 (their
+        fold contribution is exactly zero — ``kernels.ops
+        .pad_stacked_rows`` is the device-side statement of the same
+        contract)."""
+        out = dict(arrs)
+        for name in names:
+            a = out[name]
+            pad = (-a.shape[axis]) % multiple
+            if pad:
+                width = [(0, 0)] * a.ndim
+                width[axis] = (0, pad)
+                out[name] = np.pad(a, width)   # zero rows / zero weights
+        return out
 
     def _device_acc(self, params: Any) -> jax.Array:
         """Fraction of the eval set classified correctly — the chunked
@@ -140,7 +196,13 @@ class FusedExecutor:
         flags. Returns ``(params, accs)`` — the device-resident global
         after the last valid round and a (K,) host array of accuracies
         (NaN where not evaluated): ONE transfer per block.
+
+        With a mesh, dispatches to the satellite-sharded program (same
+        plan tensors, same return contract).
         """
+        if self.mesh is not None:
+            return self._run_block_sharded(params, idx, mu, do_eval,
+                                           valid)
         K, S, need = idx.shape
         n_steps = need // self.trainer.batch_size
         key = ("round", K, S, n_steps)
@@ -169,6 +231,62 @@ class FusedExecutor:
                           jnp.asarray(do_eval), jnp.asarray(valid))
         return params, np.asarray(accs)
 
+    def _run_block_sharded(self, params: Any, idx: np.ndarray,
+                           mu: np.ndarray, do_eval: np.ndarray,
+                           valid: np.ndarray):
+        """The mesh round AS the simulator's training step: ``run_block``
+        shard_map-ped over the satellite axis.
+
+        ``idx``/``mu`` shard their satellite dim over ``data`` (padded to
+        a multiple of the device count with zero-index/zero-weight dead
+        satellites); params and the eval set stay replicated. Each device
+        trains its own ``S/D`` replicas, then the per-device partial
+        folds meet in :func:`repro.core.mesh_round.sharded_fold` — the
+        production round's collective tail, ONE weighted psum per round.
+        The eval reduction runs replicated on the psum'd global (every
+        device computes the identical scalar), so accuracies keep the
+        single-transfer-per-block contract.
+        """
+        D = self.n_shards
+        padded = self._pad_sat_axis(
+            {"idx": idx, "mu": mu}, ("idx", "mu"), 1, D)
+        idx, mu = padded["idx"], padded["mu"]
+        K, Sp, need = idx.shape
+        s_loc = Sp // D
+        n_steps = need // self.trainer.batch_size
+        key = ("round_sharded", K, Sp, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def block(params, idx, mu, do_eval, valid):
+                def body(p, inp):
+                    idx_r, mu_r, ev, va = inp
+
+                    def megastep(p):
+                        trained = self._train(p, idx_r, s_loc, n_steps)
+                        return sharded_fold(trained, mu_r, ("data",),
+                                            self.use_pallas)
+
+                    p = jax.lax.cond(va, megastep, lambda q: q, p)
+                    acc = jax.lax.cond(ev & va, self._device_acc,
+                                       self._nan_acc, p)
+                    return p, acc
+
+                return jax.lax.scan(body, params,
+                                    (idx, mu, do_eval, valid))
+
+            sharded = shard_map(
+                block, mesh=self.mesh,
+                in_specs=(P(), P(None, "data", None), P(None, "data"),
+                          P(), P()),
+                out_specs=(P(), P()))
+            fn = jax.jit(sharded, donate_argnums=0)
+            self._jit[key] = fn
+        params, accs = fn(self._replicate(params),
+                          jnp.asarray(idx, jnp.int32),
+                          jnp.asarray(mu, jnp.float32),
+                          jnp.asarray(do_eval), jnp.asarray(valid))
+        return params, np.asarray(accs)
+
     def fold_block(self, stacked: Any, weight_rows: np.ndarray) -> Any:
         """K planned folds of a fixed stacked tree as one dispatch (the
         schedule-tensor batched aggregation; see tree_combine_many)."""
@@ -181,7 +299,8 @@ class FusedExecutor:
 
     # ------------------------------------------------- routed event family
     def cycle_block(self, params: Any, bases: Any, buf: Any,
-                    ev: dict[str, np.ndarray]):
+                    ev: dict[str, np.ndarray],
+                    sat_axes: tuple = ("idx", "lam")):
         """Execute K planned cycle events in one donated dispatch.
 
         Carries ``(global, per-orbit cycle bases, staleness buffer)``
@@ -194,7 +313,14 @@ class FusedExecutor:
         ``lam`` (K, k), ``rhos`` (K, B), ``keep``, ``slot`` int,
         ``flush``, ``do_eval``, ``valid``. Returns
         ``(params, bases, buf, accs)`` with accs transferred once.
+
+        With a mesh, dispatches to the member-sharded program;
+        ``sat_axes`` names the tensors whose axis 1 is the satellite
+        (cycle-member) dim to shard over ``data``.
         """
+        if self.mesh is not None:
+            return self._cycle_block_sharded(params, bases, buf, ev,
+                                             sat_axes)
         K, k, need = ev["idx"].shape
         B = ev["rhos"].shape[1]
         n_steps = need // self.trainer.batch_size
@@ -241,6 +367,87 @@ class FusedExecutor:
             self._jit[key] = fn
         g, bases, buf, accs = fn(
             params, bases, buf,
+            jnp.asarray(ev["l"], jnp.int32),
+            jnp.asarray(ev["idx"], jnp.int32),
+            jnp.asarray(ev["lam"], jnp.float32),
+            jnp.asarray(ev["rhos"], jnp.float32),
+            jnp.asarray(ev["keep"], jnp.float32),
+            jnp.asarray(ev["slot"], jnp.int32),
+            jnp.asarray(ev["flush"]),
+            jnp.asarray(ev["do_eval"]),
+            jnp.asarray(ev["valid"]))
+        return g, bases, buf, np.asarray(accs)
+
+    def _cycle_block_sharded(self, params: Any, bases: Any, buf: Any,
+                             ev: dict[str, np.ndarray], sat_axes: tuple):
+        """``cycle_block`` shard_map-ped over the cycle-member axis.
+
+        Per-event member tensors (``idx``, ``lam``) shard axis 1 over
+        ``data`` (padded with zero-index/zero-weight dead members);
+        the global, the per-orbit base table, and the staleness buffer
+        stay replicated — the per-member fold meets in
+        :func:`repro.core.mesh_round.sharded_fold`'s psum, after which
+        buffer writes and flush arithmetic run replicated (identical on
+        every device, no collective).
+        """
+        D = self.n_shards
+        ev = self._pad_sat_axis(ev, sat_axes, 1, D)
+        K, kp, need = ev["idx"].shape
+        k_loc = kp // D
+        B = ev["rhos"].shape[1]
+        n_steps = need // self.trainer.batch_size
+        key = ("cycle_sharded", K, kp, B, n_steps)
+        fn = self._jit.get(key)
+        if fn is None:
+            def block(params, bases, buf, l, idx, lam, rhos, keep, slot,
+                      flush, do_eval, valid):
+                def body(carry, inp):
+                    g, bases, buf = carry
+                    (l_e, idx_e, lam_e, rhos_e, keep_e, slot_e, fl, evf,
+                     va) = inp
+
+                    def event(args):
+                        g, bases, buf = args
+                        base = tree_row(bases, l_e)
+                        trained = self._train(base, idx_e, k_loc,
+                                              n_steps)
+                        orbit_model = sharded_fold(
+                            trained, lam_e, ("data",), self.use_pallas)
+                        buf = tree_set_row(buf, slot_e, orbit_model)
+
+                        def do_flush(g):
+                            return jax.tree.map(
+                                lambda gg, bb: keep_e * gg + jnp.einsum(
+                                    "s,s...->...", rhos_e, bb),
+                                g, buf)
+
+                        g = jax.lax.cond(fl, do_flush, lambda q: q, g)
+                        bases = tree_set_row(bases, l_e, g)
+                        return g, bases, buf
+
+                    g, bases, buf = jax.lax.cond(
+                        va, event, lambda a: a, (g, bases, buf))
+                    acc = jax.lax.cond(evf & va, self._device_acc,
+                                       self._nan_acc, g)
+                    return (g, bases, buf), acc
+
+                (g, bases, buf), accs = jax.lax.scan(
+                    body, (params, bases, buf),
+                    (l, idx, lam, rhos, keep, slot, flush, do_eval,
+                     valid))
+                return g, bases, buf, accs
+
+            sharded = shard_map(
+                block, mesh=self.mesh,
+                in_specs=(P(), P(), P(), P(), P(None, "data", None),
+                          P(None, "data"), P(), P(), P(), P(), P(),
+                          P()),
+                out_specs=(P(), P(), P(), P()))
+            fn = jax.jit(sharded, donate_argnums=(0, 1, 2))
+            self._jit[key] = fn
+        g, bases, buf, accs = fn(
+            self._replicate(params), self._replicate(bases),
+            self._replicate(buf),
             jnp.asarray(ev["l"], jnp.int32),
             jnp.asarray(ev["idx"], jnp.int32),
             jnp.asarray(ev["lam"], jnp.float32),

@@ -233,8 +233,15 @@ class CycleStrategy(Strategy):
     :meth:`plan_fold` — and executes them as one donated ``lax.scan``
     dispatch (:meth:`FusedExecutor.cycle_block`): per-orbit cycle bases
     and the staleness buffer stay resident on device, with no per-event
-    host tree-stacking.
+    host tree-stacking. On a mesh-backed executor the block tensors
+    named by :attr:`sat_axis_tensors` shard their member axis (axis 1)
+    over the ``data`` devices; everything else stays replicated.
     """
+
+    # Block tensors whose axis 1 is the satellite (cycle-member) dim —
+    # the axes a mesh-backed executor shards over "data". Subclasses
+    # adding per-member event tensors must list them here.
+    sat_axis_tensors: tuple = ("idx", "lam")
 
     def schedule_cycle(self, eng: Any, l: int,
                        t_s: float) -> Optional[Tuple[float, np.ndarray]]:
@@ -432,7 +439,7 @@ class CycleStrategy(Strategy):
                 tensors["flush"][i] = e["flush"]
                 tensors["do_eval"][i] = e["do_eval"]
             s.params, bases, buf, accs = ex.cycle_block(
-                s.params, bases, buf, tensors)
+                s.params, bases, buf, tensors, self.sat_axis_tensors)
             for i, e in enumerate(events):
                 s.t = e["t"]
                 if e["folds"]:

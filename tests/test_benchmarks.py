@@ -87,6 +87,23 @@ class TestGeometryBench:
         assert check_regression.check(doc, slow, 0.30)
         assert not check_regression.check(doc, doc, 0.30)
 
+    def test_check_regression_guards_sharded_rates(self):
+        from benchmarks import check_regression
+        doc = {"sim_sharded": [
+            {"scenario": "grid:3x6 x 20x40", "devices": 8,
+             "rps_1": 4.0, "rps_sharded": 6.0, "scaling": 1.5}]}
+        base = check_regression._rate_metrics(doc)
+        assert base == {
+            "sim_sharded[grid:3x6 x 20x40].rps_1": 4.0,
+            "sim_sharded[grid:3x6 x 20x40].rps_sharded": 6.0}
+        slow = {"sim_sharded": [
+            {"scenario": "grid:3x6 x 20x40", "devices": 8,
+             "rps_1": 4.0, "rps_sharded": 2.0}]}
+        # 67% drop fails even through the section's wide slack
+        tol = check_regression.parse_tolerances(["sim_sharded=0.5"], 0.30)
+        assert check_regression.check(doc, slow, tol)
+        assert not check_regression.check(doc, doc, tol)
+
     def test_check_regression_mega_sweep_section_tolerance(self):
         from benchmarks import check_regression
         doc = {"routing": {"mega_sweep": [

@@ -1,0 +1,235 @@
+"""Sharded simulator megastep + multi-shell constellation tests.
+
+Device-count checks need >1 XLA device; device count is fixed at first
+jax init, so they run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8
+(tests/helpers/check_sim_sharded.py — the same isolation pattern as
+test_fedhap_mesh.py). The tier-1 run covers one strategy per fused
+family plus the param-level megastep/padding/bitwise checks; the full
+8-strategy sweep is ``-m slow`` (CI's multi-device tier runs it).
+
+Everything else here — ``shells:`` parsing, inter-shell ISL gating,
+mesh-map validation, single-device padding — runs in-process.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dissemination import ConstellationMeshMap
+from repro.kernels.ops import fold_stacked_tree, pad_stacked_rows
+from repro.orbits import (
+    MultiShellConstellation,
+    WalkerConstellation,
+    parse_shells,
+)
+from repro.orbits.visibility import isl_mask_from_positions
+from repro.sim import RoundEngine, SimConfig
+
+HELPERS = pathlib.Path(__file__).parent / "helpers"
+SRC = pathlib.Path(__file__).parent.parent / "src"
+
+TWO_SHELL = "shells:3x8@550+2x8@1200/60"
+
+
+def _run(script: str, *args: str,
+         timeout: int = 1800) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}:{env.get('PYTHONPATH', '')}"
+    env.pop("XLA_FLAGS", None)  # script sets its own
+    return subprocess.run(
+        [sys.executable, str(HELPERS / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+class TestShardedSubprocess:
+    def test_sharded_megastep_quick(self):
+        """8-device histories match single-device (fedhap +
+        fedhap_async), param-level run_block/cycle_block equivalence,
+        S-not-divisible padding, 1-device bitwise identity."""
+        res = _run("check_sim_sharded.py", "quick")
+        assert res.returncode == 0, \
+            f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+        assert "ALL SIM SHARDED CHECKS PASSED" in res.stdout
+
+    @pytest.mark.slow
+    def test_sharded_megastep_all_strategies(self):
+        """Every registered strategy's fused history is device-count
+        independent (the CI multi-device tier's entry point)."""
+        res = _run("check_sim_sharded.py", "all")
+        assert res.returncode == 0, \
+            f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+        assert "ALL SIM SHARDED CHECKS PASSED" in res.stdout
+
+
+class TestShellSpecs:
+    def test_parse_two_shells(self):
+        specs = parse_shells(TWO_SHELL)
+        assert [s.num_orbits for s in specs] == [3, 2]
+        assert [s.sats_per_orbit for s in specs] == [8, 8]
+        assert specs[0].altitude_m == 550_000.0
+        assert specs[1].altitude_m == 1_200_000.0
+        assert specs[0].inclination_deg == 80.0  # default
+        assert specs[1].inclination_deg == 60.0
+
+    def test_parse_prefix_optional(self):
+        assert parse_shells("5x8@2000") == parse_shells("shells:5x8@2000")
+
+    @pytest.mark.parametrize("bad", [
+        "shells:", "shells:5x8", "shells:x8@550", "shells:5x8@",
+        "shells:5x8@550+4x6@1200",       # non-uniform sats_per_orbit
+        "shells:0x8@550",
+    ])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_shells(bad)
+
+    def test_stacked_ephemeris_concatenates_shells(self):
+        c = MultiShellConstellation(TWO_SHELL)
+        assert len(c) == 40
+        assert c.num_orbits == 5 and c.sats_per_orbit == 8
+        assert list(np.bincount(c.shell_of)) == [24, 16]
+        pos = c.positions_eci(np.array([0.0, 60.0]))
+        assert pos.shape == (40, 2, 3)
+        r = np.linalg.norm(pos[:, 0], axis=-1)
+        # each shell orbits at its own radius
+        lo, hi = r[c.shell_of == 0], r[c.shell_of == 1]
+        assert np.allclose(lo, lo[0]) and np.allclose(hi, hi[0])
+        assert hi[0] - lo[0] == pytest.approx(650_000.0, rel=1e-6)
+        # per-satellite altitude/inclination tables follow the shells
+        assert c.satellites[0].altitude_m == pytest.approx(550_000.0)
+        assert c.satellites[-1].altitude_m == pytest.approx(1_200_000.0)
+
+    def test_inter_shell_isl_gating_prunes_grazing_links(self):
+        """Cross-shell LoS is purely positional: chords dipping under
+        R_E + grazing altitude are pruned, so raising the grazing
+        altitude can only remove cross-shell links."""
+        c = MultiShellConstellation(TWO_SHELL)
+        pos = c.positions_eci(np.array([0.0]))
+        cross = np.ix_(c.shell_of == 0, c.shell_of == 1)
+        gated = isl_mask_from_positions(pos)[cross]
+        ungated = isl_mask_from_positions(
+            pos, grazing_altitude_m=0.0)[cross]
+        assert gated.any()                    # shells do interconnect
+        assert ungated.sum() > gated.sum()    # gating prunes grazing links
+        assert not (gated & ~ungated).any()   # gating only removes
+
+    def test_engine_runs_fused_on_shells(self):
+        cfg = SimConfig(strategy="fedhap", stations="one_hap",
+                        shells=TWO_SHELL, model_kind="mlp",
+                        num_samples=1500, eval_samples=300,
+                        local_steps=2, horizon_h=12.0,
+                        time_step_s=120.0, max_rounds=2)
+        assert cfg.num_orbits == 5 and cfg.sats_per_orbit == 8
+        eng = RoundEngine(cfg)
+        assert isinstance(eng.constellation, MultiShellConstellation)
+        res = eng.run()
+        assert res.history and np.isfinite(res.final_accuracy)
+
+
+class TestMeshMapFromConstellation:
+    def test_derived_map_matches_layout(self):
+        c = WalkerConstellation(6, 4, 2_000_000.0, 80.0)
+        m = ConstellationMeshMap.from_constellation(c, n_pods=2)
+        assert (m.n_orbits, m.sats_per_orbit, m.n_pods) == (3, 4, 2)
+        assert m.total_sats == len(c)
+
+    def test_untileable_constellation_raises(self):
+        c = WalkerConstellation(5, 8, 2_000_000.0, 80.0)
+        with pytest.raises(ValueError, match="whole number of planes"):
+            ConstellationMeshMap.from_constellation(c, n_pods=2)
+
+    def test_validate_mesh_rejects_wrong_data_extent(self):
+        cmap = ConstellationMeshMap(n_orbits=4, sats_per_orbit=4)
+
+        class FakeMesh:
+            shape = {"data": 8, "model": 2}
+
+        with pytest.raises(ValueError, match="cannot tile"):
+            cmap.validate_mesh(FakeMesh())
+
+
+class TestPaddedFold:
+    """Satellite counts not divisible by the device count: the padded
+    dead rows must contribute exactly zero (satellite 2 of the issue;
+    the multi-device halves live in check_sim_sharded.py)."""
+
+    def _stacked(self, s=5, seed=0):
+        k = jax.random.split(jax.random.key(seed), 3)
+        tree = {"w": jax.random.normal(k[0], (s, 6, 4)),
+                "b": {"x": jax.random.normal(k[1], (s, 4))}}
+        w = jax.random.uniform(k[2], (s,), jnp.float32)
+        return tree, w / w.sum()
+
+    def test_pad_shapes_and_zero_rows(self):
+        tree, w = self._stacked(5)
+        padded, wp = pad_stacked_rows(tree, w, 4)
+        assert all(l.shape[0] == 8 for l in jax.tree.leaves(padded))
+        assert wp.shape == (8,) and np.all(np.asarray(wp[5:]) == 0.0)
+        np.testing.assert_array_equal(np.asarray(padded["w"][5:]), 0.0)
+
+    def test_pad_noop_when_aligned(self):
+        tree, w = self._stacked(8)
+        padded, wp = pad_stacked_rows(tree, w, 4)
+        assert padded is tree
+        np.testing.assert_array_equal(np.asarray(wp), np.asarray(w))
+
+    def test_pad_rejects_bad_multiple(self):
+        tree, w = self._stacked(5)
+        with pytest.raises(ValueError, match="multiple"):
+            pad_stacked_rows(tree, w, 0)
+
+    @pytest.mark.parametrize("use_pallas", [False, True],
+                             ids=["einsum", "pallas"])
+    def test_padded_fold_bitwise_equal(self, use_pallas):
+        """S=5 padded to 8: zero rows x zero weights append exact-zero
+        terms, so the fold is BIT-identical through both backends."""
+        tree, w = self._stacked(5)
+        want = fold_stacked_tree(tree, w, use_pallas)
+        got = fold_stacked_tree(tree, w, use_pallas, pad_to=4)
+        for g, x in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+
+
+class TestSimMeshConfig:
+    def test_make_sim_mesh_rejects_oversubscription(self):
+        from repro.launch.mesh import make_sim_mesh
+        with pytest.raises(ValueError, match="data shards"):
+            make_sim_mesh(jax.device_count() + 1)
+        with pytest.raises(ValueError, match="at least one"):
+            make_sim_mesh(0)
+
+    def test_executor_rejects_mesh_without_data_axis(self):
+        from repro.sim.executor import FusedExecutor
+
+        class FakeMesh:
+            axis_names = ("model",)
+            shape = {"model": 1}
+
+        eng = RoundEngine(SimConfig(model_kind="mlp", num_samples=300,
+                                    eval_samples=50, horizon_h=1.0))
+        with pytest.raises(ValueError, match="data"):
+            FusedExecutor(eng.trainer, eng.fd, eng.eval_images,
+                          eng.eval_labels, mesh=FakeMesh())
+
+    def test_single_device_mesh_runs_in_process(self):
+        """data_shards=1 maps to mesh=None; an explicit 1-device mesh
+        exercises the shard_map path on the lone CPU device and must
+        reproduce the unsharded history bit for bit."""
+        from repro.launch.mesh import make_sim_mesh
+        quick = dict(model_kind="mlp", num_samples=1500,
+                     eval_samples=300, local_steps=2, horizon_h=36.0,
+                     time_step_s=120.0, max_rounds=3)
+        h1 = RoundEngine(SimConfig(strategy="fedhap",
+                                   stations="one_hap", **quick)).run()
+        hm = RoundEngine(SimConfig(strategy="fedhap",
+                                   stations="one_hap",
+                                   mesh=make_sim_mesh(1),
+                                   **quick)).run()
+        assert h1.history == hm.history
