@@ -598,6 +598,87 @@ def bench_sweep(scenarios, horizon_h: float, step_s: float,
     return out
 
 
+def _plan_drive(eng, rounds: int) -> tuple[int, float]:
+    """Plan-phase throughput: plan_round + plane resolve per round,
+    no SGD — the host-side work the client plane adds to a round."""
+    from repro.sim.strategies import get_strategy
+    strat = get_strategy("fedhap")()
+    all_sats = list(range(eng.n_sats))
+    t, done = 0.0, 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        plan = strat.plan_round(eng, t)
+        if plan is None:
+            break
+        eng.sample_indices(all_sats, t)
+        t = plan.t_next
+        done += 1
+    return done, time.perf_counter() - t0
+
+
+def bench_client_plane(smoke: bool) -> list[dict]:
+    """Static vs virtual-client-plane planning overhead.
+
+    Drives the fedhap plan phase (scheduling + per-round sample-index
+    resolution, no local SGD) on one engine per plane and reports
+    rounds/s. The geo plane must stay above 0.5x the static plane's
+    planning throughput — the acceptance bar for streaming acquisition
+    at >= 10k virtual clients.
+    """
+    if smoke:
+        shell, horizon_h, rounds = (10, 20), 24.0, 4
+        planes = ["sampled:0.1x10000", "geo:32x10000@0.1"]
+    else:
+        shell, horizon_h, rounds = (20, 40), 48.0, 8
+        planes = ["sampled:0.1x10000", "geo:64x10000@0.1"]
+    lite = dict(_SIM_LITE, num_samples=20_000)  # >= 1 sample / client
+
+    def make(plane_spec: str) -> tuple[RoundEngine, float]:
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        num_orbits=shell[0], sats_per_orbit=shell[1],
+                        horizon_h=horizon_h, time_step_s=60.0,
+                        clients=plane_spec, **lite)
+        t0 = time.perf_counter()
+        eng = RoundEngine(cfg)
+        return eng, time.perf_counter() - t0
+
+    out = []
+    eng, init_s = make("static")
+    done, wall = _plan_drive(eng, rounds)
+    static_rps = done / wall
+    out.append({
+        "shell": f"{shell[0]}x{shell[1]}", "stations": "two_hap",
+        "plane": "static", "n_clients": eng.n_sats, "rounds": done,
+        "engine_init_s": round(init_s, 2),
+        "plan_rps": round(static_rps, 2),
+    })
+    print(f"  client_plane[static x {out[0]['shell']}]: "
+          f"{static_rps:.2f} plan rounds/s", flush=True)
+    for spec in planes:
+        eng, init_s = make(spec)
+        done, wall = _plan_drive(eng, rounds)
+        rps = done / wall
+        desc = eng.client_plane.describe()
+        row = {
+            "shell": f"{shell[0]}x{shell[1]}", "stations": "two_hap",
+            "plane": spec, "n_clients": desc["clients"],
+            "rounds": done,
+            "engine_init_s": round(init_s, 2),
+            "plan_rps": round(rps, 2),
+            "vs_static": round(rps / static_rps, 3),
+        }
+        if "regions" in desc:
+            row["regions"] = desc["regions"]
+            assert rps > 0.5 * static_rps, (
+                f"geo plane planning throughput {rps:.2f} rounds/s fell "
+                f"below 0.5x static ({static_rps:.2f})")
+        out.append(row)
+        print(f"  client_plane[{spec} x {row['shell']}]: "
+              f"{rps:.2f} plan rounds/s ({row['vs_static']:.2f}x static)",
+              flush=True)
+    return out
+
+
 def run(smoke: bool = False, sim_wallclock: bool = False,
         rounds: int = 25) -> dict:
     doc: dict = {"schema": 1, "smoke": smoke}
@@ -645,6 +726,10 @@ def run(smoke: bool = False, sim_wallclock: bool = False,
 
     doc["sweep"] = bench_sweep(sweep_scenarios, horizon_h, step_s,
                                rounds=sweep_rounds)
+    gc.collect()
+
+    print("client_plane:", flush=True)
+    doc["client_plane"] = bench_client_plane(smoke)
 
     if sim_wallclock:
         from benchmarks.sim_wallclock import report

@@ -65,6 +65,9 @@ def _rate_metrics(doc: dict) -> dict[str, float]:
     for row in routing.get("mega_sweep") or []:
         put(f"routing.mega_sweep[{row['shell']}].sched_eps",
             row.get("sched_eps"))
+    for row in doc.get("client_plane") or []:
+        put(f"client_plane[{row['plane']} x {row['shell']}].plan_rps",
+            row.get("plan_rps"))
     wall = doc.get("sim_wallclock") or {}
     if wall:
         put("sim_wallclock.engine_rps", wall.get("engine_rps"))

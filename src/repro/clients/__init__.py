@@ -1,0 +1,32 @@
+"""Production client plane: datasets, partitioners, virtual clients.
+
+Three registries/subsystems:
+
+- :mod:`repro.clients.registry` — ``register_dataset`` /
+  ``load_dataset``: digits, tokens, synthetic-EO behind one interface.
+- :mod:`repro.clients.partitioners` — ``register_partitioner`` /
+  ``partition``: IID, orbit, Dirichlet(alpha), shards, plus
+  ``label_histograms`` introspection.
+- :mod:`repro.clients.plane` — the virtual-client plane resolving
+  which sample indices each satellite trains on per round
+  (``SimConfig.clients`` grammar: ``static`` / ``sampled:...`` /
+  ``geo:...``).
+"""
+from repro.clients.registry import (available_datasets, get_dataset,
+                                    load_dataset, register_dataset)
+from repro.clients.partitioners import (available_partitioners,
+                                        get_partitioner, label_histograms,
+                                        partition, register_partitioner)
+from repro.clients.plane import (ClientPlane, GeoPlane, SampledPlane,
+                                 StaticPlane, VirtualClients, build_plane,
+                                 first_crossing_table, region_grid)
+
+__all__ = [
+    "available_datasets", "get_dataset", "load_dataset",
+    "register_dataset",
+    "available_partitioners", "get_partitioner", "label_histograms",
+    "partition", "register_partitioner",
+    "ClientPlane", "GeoPlane", "SampledPlane", "StaticPlane",
+    "VirtualClients", "build_plane", "first_crossing_table",
+    "region_grid",
+]

@@ -12,6 +12,10 @@ class BatchIterator:
 
     Mirrors the paper's per-satellite mini-batch SGD stream (batch 32).
     Reshuffles each epoch with a per-epoch PRNG stream.
+
+    Shards smaller than one batch (common for virtual-client splits)
+    are padded per epoch by sampling with replacement so every epoch
+    still yields one full batch; only an empty dataset is an error.
     """
 
     def __init__(
@@ -24,8 +28,8 @@ class BatchIterator:
         n = len(arrays[0])
         if any(len(a) != n for a in arrays):
             raise ValueError("arrays must share their leading dimension")
-        if n < batch_size and drop_remainder:
-            raise ValueError(f"dataset ({n}) smaller than batch ({batch_size})")
+        if n == 0:
+            raise ValueError("cannot batch an empty dataset")
         self._arrays = [np.asarray(a) for a in arrays]
         self._n = n
         self._bs = batch_size
@@ -37,13 +41,17 @@ class BatchIterator:
 
     def _reshuffle(self) -> np.ndarray:
         rng = np.random.default_rng((self._seed, self._epoch))
-        return rng.permutation(self._n)
+        order = rng.permutation(self._n)
+        if self._drop and self._n < self._bs:
+            pad = rng.integers(0, self._n, size=self._bs - self._n)
+            order = np.concatenate([order, pad])
+        return order
 
     def __iter__(self) -> Iterator[tuple[np.ndarray, ...]]:
         return self
 
     def __next__(self) -> tuple[np.ndarray, ...]:
-        if self._pos + self._bs > self._n:
+        if self._pos + self._bs > len(self._order):
             self._epoch += 1
             self._order = self._reshuffle()
             self._pos = 0
@@ -56,6 +64,8 @@ class BatchIterator:
         return self._epoch
 
     def epoch_batches(self) -> int:
+        if self._drop and self._n < self._bs:
+            return 1
         return self._n // self._bs
 
 

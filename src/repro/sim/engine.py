@@ -56,6 +56,30 @@ Architecture (see also ``repro.core.strategies``):
   under ``repro.sim.strategies`` supplying only scheduling + weighting
   rules; ``SimConfig.strategy`` resolves through the registry, so new
   methods and scenarios are config, not simulator edits.
+
+``SimConfig.clients`` grammar (the virtual-client plane,
+``repro.clients.plane``) — every training point asks the plane for the
+``(C, local_steps * batch)`` per-satellite sample-index tables, which
+feed the existing gather -> vmapped-SGD path and the fused executor's
+schedule tensors unchanged::
+
+    static                   # default: one static shard per satellite,
+                             # bit-identical to pre-plane histories
+    sampled:FRAC[xCLIENTS]   # CLIENTS virtual ground clients (default
+                             # 10 * n_sats) multiplexed onto satellites;
+                             # per-round Bernoulli(FRAC) participation
+    geo:REGIONSxCLIENTS[@FRAC]
+                             # clients live in lat/lon regions; a
+                             # satellite only reads a client's samples
+                             # after its ground track first crosses the
+                             # region (streaming acquisition — the
+                             # distribution drifts orbit over orbit)
+
+``SimConfig.client_partitioner`` picks how the virtual clients split
+the dataset (``repro.clients.partitioners`` registry: ``iid``,
+``dirichlet:ALPHA``, ``shards:K``); aggregation masses stay the static
+Eq.-14 per-satellite sizes, so plan phases and the donated megastep
+are untouched by the plane choice.
 """
 from __future__ import annotations
 
@@ -68,9 +92,9 @@ import numpy as np
 from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
 from repro.configs.paper_mlp import CONFIG as MLP_CONFIG
 from repro.core.treeops import tree_combine
+from repro.clients import build_plane, load_dataset
 from repro.data import (
     FederatedData,
-    make_digits_dataset,
     partition_iid,
     partition_noniid_by_orbit,
 )
@@ -133,9 +157,17 @@ class SimConfig:
     # stacked-shell layout (see repro.orbits.parse_shells)
     shells: str = ""
     # training
+    dataset: str = "digits"       # repro.clients.registry dataset spec
     num_samples: int = 70_000
     local_steps: int = 54         # ~1 epoch of a 1750-sample shard @ bs 32
     batch_size: int = 32
+    # client plane: "static" | "sampled:FRAC[xCLIENTS]" |
+    # "geo:REGIONSxCLIENTS[@FRAC]" (see module docstring / repro.clients)
+    clients: str = "static"
+    # virtual-client dataset partitioner ("iid", "dirichlet:0.3",
+    # "shards:2", ... — repro.clients.partitioners registry); only used
+    # by non-static planes
+    client_partitioner: str = "iid"
     learning_rate: float = 0.01
     compute_s_per_step: float = 0.1
     # timeline
@@ -256,15 +288,22 @@ class RoundEngine:
         rng = np.random.default_rng(cfg.seed)
         self.rng = rng
 
-        images, labels = make_digits_dataset(cfg.num_samples, seed=cfg.seed)
+        images, labels = load_dataset(
+            cfg.dataset, num_samples=cfg.num_samples, seed=cfg.seed)
         n_eval = cfg.eval_samples
         self.eval_images, self.eval_labels = images[:n_eval], labels[:n_eval]
         tr_img, tr_lab = images[n_eval:], labels[n_eval:]
         if cfg.iid:
             parts = partition_iid(tr_lab, self.n_sats, cfg.seed)
         else:
+            # Multi-shell layouts key the 60/40 orbit class-group split
+            # per shell (the stacked plane table), not globally.
+            shell_of = getattr(self.constellation, "shell_of", None)
+            orbit_shells = None if shell_of is None else np.asarray(
+                shell_of)[::cfg.sats_per_orbit]
             parts = partition_noniid_by_orbit(
-                tr_lab, cfg.num_orbits, cfg.sats_per_orbit, cfg.seed)
+                tr_lab, cfg.num_orbits, cfg.sats_per_orbit, cfg.seed,
+                orbit_shells=orbit_shells)
         self.fd = FederatedData(tr_img, tr_lab, parts)
         self.sizes = self.fd.client_sizes().astype(np.float64)
 
@@ -332,6 +371,19 @@ class RoundEngine:
         a, b = (self.constellation.orbit_members(0)[0],
                 self.constellation.orbit_members(0)[1])
         self.isl_dist = self.constellation.isl_distance_m(a, b, 0.0)
+
+        # Virtual-client plane: resolves per-round/event sample-index
+        # tables for every training point (strategies never call the
+        # trainer's sampler directly anymore). "static" wraps the
+        # historical shared-rng sampler bit-identically; geo planes
+        # reuse the already-propagated ephemerides for their
+        # first-crossing acquisition tables.
+        self.client_plane = build_plane(
+            cfg.clients, trainer=self.trainer, fd=self.fd, rng=self.rng,
+            local_steps=cfg.local_steps, seed=cfg.seed,
+            partitioner=cfg.client_partitioner,
+            grid_t=self.grid_t, sat_positions=sat_pos,
+            time_step_s=cfg.time_step_s)
 
         # Fused execute backend (built on first use; see `executor`).
         self._executor = None
@@ -849,13 +901,18 @@ class RoundEngine:
         return el
 
     # ------------------------------------------------- training/agg ops
-    def train_all(self, params: Any):
+    def sample_indices(self, sats, t_s: float = 0.0) -> np.ndarray:
+        """Resolve the ``(len(sats), local_steps * batch)`` sample-index
+        tables the given satellites train on at sim time ``t_s`` —
+        the client plane's single entry point for every strategy."""
+        return self.client_plane.sample_indices(sats, t_s)
+
+    def train_all(self, params: Any, t_s: float = 0.0):
         """One local-SGD burst on every satellite (vmapped); returns the
         stacked per-satellite params."""
         stacked = self.trainer.stack([params] * self.n_sats)
-        stacked, _ = self.trainer.train_clients(
-            stacked, self.fd, list(range(self.n_sats)),
-            self.cfg.local_steps, self.rng)
+        sel = self.sample_indices(np.arange(self.n_sats), t_s)
+        stacked, _ = self.trainer.train_selection(stacked, self.fd, sel)
         return stacked
 
     def combine(self, stacked: Any, weights: Any):

@@ -148,7 +148,7 @@ class RoundStrategy(Strategy):
         if plan is None:
             s.t = eng.horizon_s + 1.0
             return False
-        stacked = eng.train_all(s.params)
+        stacked = eng.train_all(s.params, s.t)
         s.params = eng.combine(stacked, plan.mu)
         s.t = plan.t_next
         s.events += 1
@@ -166,7 +166,7 @@ class RoundStrategy(Strategy):
         while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
                and s.acc < cfg.target_accuracy):
             # Plan ahead: chain K rounds (plans are param-independent).
-            plans, t, terminal = [], s.t, False
+            plans, t_starts, t, terminal = [], [], s.t, False
             while (len(plans) < K and s.events + len(plans) < cfg.max_rounds
                    and t <= eng.horizon_s):
                 plan = self.plan_round(eng, t)
@@ -174,17 +174,18 @@ class RoundStrategy(Strategy):
                     terminal = True
                     break
                 plans.append(plan)
+                t_starts.append(t)
                 t = plan.t_next
             if not plans:
                 s.t = eng.horizon_s + 1.0
                 return
             # Schedule tensors (padded to the fixed block size K) + the
-            # host-sampled batch indices (same rng stream as `step`).
+            # host-resolved batch indices (same plane stream as `step`:
+            # one resolve per planned round, at that round's start time).
             n = len(plans)
             idx = np.zeros((K, n_sats, need), dtype=np.int64)
             for i in range(n):
-                idx[i] = eng.trainer.sample_client_indices(
-                    eng.fd, all_clients, cfg.local_steps, eng.rng)
+                idx[i] = eng.sample_indices(all_clients, t_starts[i])
             mu = np.zeros((K, n_sats), dtype=np.float32)
             do_eval = np.zeros(K, dtype=bool)
             for i, plan in enumerate(plans):
@@ -313,8 +314,8 @@ class CycleStrategy(Strategy):
         k = eng.cfg.sats_per_orbit
         clients = list(range(l * k, (l + 1) * k))
         stacked = eng.trainer.stack([sc["cycle_base"][l]] * k)
-        stacked, _ = eng.trainer.train_clients(
-            stacked, eng.fd, clients, eng.cfg.local_steps, eng.rng)
+        sel = eng.sample_indices(clients, float(arrival))
+        stacked, _ = eng.trainer.train_selection(stacked, eng.fd, sel)
         s.t = float(arrival)
         self.fold(eng, s, l, eng.combine(stacked, lam), sc["cycle_tag"][l])
         self._launch(eng, s, l)
@@ -428,9 +429,8 @@ class CycleStrategy(Strategy):
             }
             for i, e in enumerate(events):
                 sl = eng.orbit_slice(e["l"])
-                tensors["idx"][i] = eng.trainer.sample_client_indices(
-                    eng.fd, list(range(sl.start, sl.stop)),
-                    cfg.local_steps, eng.rng)
+                tensors["idx"][i] = eng.sample_indices(
+                    list(range(sl.start, sl.stop)), e["t"])
                 tensors["l"][i] = e["l"]
                 tensors["lam"][i] = e["lam"]
                 tensors["rhos"][i] = e["rhos"]

@@ -54,8 +54,8 @@ class FedSat(Strategy):
                    for c in range(l * k, (l + 1) * k)]
         stacked = eng.trainer.stack(
             [base[l] for l in visited for _ in range(k)])
-        stacked, _ = eng.trainer.train_clients(
-            stacked, eng.fd, clients, cfg.local_steps, eng.rng)
+        sel = eng.sample_indices(clients, s.t)
+        stacked, _ = eng.trainer.train_selection(stacked, eng.fd, sel)
         for i, l in enumerate(visited):
             sl = eng.orbit_slice(l)
             orbit_rows = jax.tree.map(
@@ -87,8 +87,7 @@ class FedSat(Strategy):
             visited, advance = plan
             clients = [c for l in visited
                        for c in range(l * k, (l + 1) * k)]
-            idx = eng.trainer.sample_client_indices(
-                eng.fd, clients, cfg.local_steps, eng.rng)
+            idx = eng.sample_indices(clients, s.t)
             sizes = eng.sizes.reshape(cfg.num_orbits, k)[visited]
             lam_rows = sizes / sizes.sum(axis=1, keepdims=True)
             rhos = sizes.sum(axis=1) / total

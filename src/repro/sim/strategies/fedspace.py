@@ -46,9 +46,9 @@ class FedSpace(Strategy):
             # every fresh pass in this tick trains in ONE vmapped burst
             stacked = eng.trainer.stack(
                 [sc["sat_base"][int(x)] for x in new_sats])
-            trained, _ = eng.trainer.train_clients(
-                stacked, eng.fd, new_sats.tolist(), cfg.local_steps,
-                eng.rng)
+            sel = eng.sample_indices(new_sats.tolist(), s.t)
+            trained, _ = eng.trainer.train_selection(
+                stacked, eng.fd, sel)
             for j, sat in enumerate(new_sats):
                 sat = int(sat)
                 new_p = eng.trainer.unstack(trained, j)
@@ -88,8 +88,7 @@ class FedSpace(Strategy):
             new_sats = np.nonzero(vis & ~last_seen)[0]
             last_seen = vis
             if len(new_sats):
-                idx = eng.trainer.sample_client_indices(
-                    eng.fd, new_sats.tolist(), cfg.local_steps, eng.rng)
+                idx = eng.sample_indices(new_sats.tolist(), s.t)
                 deltas, bases = ex.fedspace_train(
                     s.params, bases, new_sats, idx)
                 buffer.append((deltas, new_sats, base_tag[new_sats]))

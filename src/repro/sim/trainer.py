@@ -95,6 +95,20 @@ class LocalTrainer:
                 np.where(valid, keys, np.inf), axis=1)[:, :need]
         return padded[clients[:, None], local]           # (C, need) global
 
+    def gather_selection(self, fd: FederatedData, sel: np.ndarray):
+        """Gather ``(C, need)`` global indices into batch streams.
+
+        One fancy-index op over the dataset arrays; ``sel`` may come
+        from ``sample_client_indices`` or from a virtual-client plane
+        (``repro.clients.plane``). Returns ``(C, n_steps, bs, ...)``.
+        """
+        n_clients, need = sel.shape
+        n_steps = need // self.batch_size
+        x = fd.images[sel].reshape(n_clients, n_steps, self.batch_size,
+                                   *fd.images.shape[1:])
+        y = fd.labels[sel].reshape(n_clients, n_steps, self.batch_size)
+        return x, y
+
     def sample_client_batches(self, fd: FederatedData,
                               clients: Sequence[int], n_steps: int,
                               rng: np.random.Generator):
@@ -105,12 +119,7 @@ class LocalTrainer:
         ``(C, n_steps, bs, ...)`` arrays.
         """
         sel = self.sample_client_indices(fd, clients, n_steps, rng)
-        n_clients, need = sel.shape
-        n_steps = need // self.batch_size
-        x = fd.images[sel].reshape(n_clients, n_steps, self.batch_size,
-                                   *fd.images.shape[1:])
-        y = fd.labels[sel].reshape(n_clients, n_steps, self.batch_size)
-        return x, y
+        return self.gather_selection(fd, sel)
 
     def train_client(self, params, fd: FederatedData, client: int,
                      n_steps: int, rng: np.random.Generator):
@@ -120,14 +129,20 @@ class LocalTrainer:
                                              jnp.asarray(y[0]))
         return new_params, float(losses[-1])
 
+    def train_selection(self, stacked_params, fd: FederatedData,
+                        sel: np.ndarray):
+        """Train MANY satellites on a resolved ``(C, need)`` index table."""
+        x, y = self.gather_selection(fd, sel)
+        new_params, losses = self._train_many(
+            stacked_params, jnp.asarray(x), jnp.asarray(y))
+        return new_params, np.asarray(losses[:, -1])
+
     def train_clients(self, stacked_params, fd: FederatedData,
                       clients: Sequence[int], n_steps: int,
                       rng: np.random.Generator):
         """Train MANY satellites at once (stacked leading dim)."""
-        x, y = self.sample_client_batches(fd, clients, n_steps, rng)
-        new_params, losses = self._train_many(
-            stacked_params, jnp.asarray(x), jnp.asarray(y))
-        return new_params, np.asarray(losses[:, -1])
+        sel = self.sample_client_indices(fd, clients, n_steps, rng)
+        return self.train_selection(stacked_params, fd, sel)
 
     def evaluate(self, params, images: np.ndarray, labels: np.ndarray,
                  batch: int = 2048) -> float:

@@ -1,0 +1,355 @@
+"""Tests for the client plane subsystem (``repro.clients``).
+
+Covers the dataset registry, the partitioner registry (Dirichlet limit
+behavior, histograms, determinism), and the virtual-client plane:
+static bit-identity with the trainer's historical sampler, sampled /
+geo plane validity + fused-vs-per-round history equivalence, and the
+geo acquisition table's monotone streaming semantics.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.clients import (
+    GeoPlane,
+    StaticPlane,
+    VirtualClients,
+    available_datasets,
+    available_partitioners,
+    build_plane,
+    first_crossing_table,
+    get_partitioner,
+    label_histograms,
+    load_dataset,
+    partition,
+    region_grid,
+    register_dataset,
+)
+from repro.data import FederatedData
+from repro.sim.engine import RoundEngine, SimConfig
+
+QUICK = dict(model_kind="mlp", num_samples=1500, eval_samples=300,
+             local_steps=2, horizon_h=36.0, time_step_s=120.0,
+             max_rounds=4)
+
+
+# ----------------------------------------------------------------------
+class TestDatasetRegistry:
+    def test_registered_names(self):
+        names = available_datasets()
+        assert {"digits", "tokens", "synthetic_eo"} <= set(names)
+
+    def test_load_digits_matches_direct(self):
+        from repro.data import make_digits_dataset
+        x, y = load_dataset("digits", num_samples=200, seed=3)
+        xd, yd = make_digits_dataset(200, seed=3)
+        np.testing.assert_array_equal(x, xd)
+        np.testing.assert_array_equal(y, yd)
+
+    def test_inline_num_samples(self):
+        x, y = load_dataset("digits:150", seed=0)
+        assert len(x) == len(y) == 150
+
+    def test_tokens_supervised_shapes(self):
+        x, y = load_dataset("tokens", num_samples=500, seed=0)
+        assert x.shape == (500, 32) and x.dtype == np.int32
+        assert y.shape == (500,) and y.dtype == np.int32
+        assert 0 <= y.min() and y.max() < 16
+
+    def test_synthetic_eo_shapes_and_determinism(self):
+        x, y = load_dataset("synthetic_eo", num_samples=400, seed=1)
+        x2, y2 = load_dataset("synthetic_eo", num_samples=400, seed=1)
+        assert x.shape == (400, 16, 16, 4)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        np.testing.assert_array_equal(x, x2)
+        np.testing.assert_array_equal(y, y2)
+
+    def test_eo_classes_latitude_correlated(self):
+        from repro.data import make_eo_dataset_with_latitude
+        _, y, lat = make_eo_dataset_with_latitude(4000, seed=0)
+        # Mean latitude per class should spread across the band.
+        means = [lat[y == c].mean() for c in np.unique(y)]
+        assert max(means) - min(means) > 30.0
+
+    def test_unknown_and_duplicate(self):
+        with pytest.raises(KeyError):
+            load_dataset("nope")
+        with pytest.raises(ValueError):
+            register_dataset("digits")(lambda **kw: None)
+
+
+# ----------------------------------------------------------------------
+class TestPartitioners:
+    def test_registered_names(self):
+        assert {"iid", "orbit", "dirichlet",
+                "shards"} <= set(available_partitioners())
+
+    def test_spec_parsing(self):
+        _, kw = get_partitioner("dirichlet:0.25")
+        assert kw == {"alpha": 0.25}
+        _, kw = get_partitioner("shards:3")
+        assert kw == {"shards_per_client": 3}
+        with pytest.raises(KeyError):
+            get_partitioner("nope")
+        with pytest.raises(ValueError):
+            get_partitioner("iid:3")       # iid takes no inline arg
+
+    def test_histograms_sum_to_dataset(self):
+        y = np.arange(4000) % 10
+        for spec in ("iid", "dirichlet:0.5", "shards:2"):
+            parts = partition(spec, y, 25, seed=0)
+            h = label_histograms(y, parts, num_classes=10)
+            assert h.shape == (25, 10)
+            assert h.sum() == len(y)                     # exhaustive
+            np.testing.assert_array_equal(
+                h.sum(axis=0), np.bincount(y, minlength=10))
+            sizes = np.array([len(p) for p in parts])
+            np.testing.assert_array_equal(h.sum(axis=1), sizes)
+
+    def test_partitions_are_disjoint(self):
+        y = np.arange(3000) % 10
+        for spec in ("dirichlet:0.3", "shards:4"):
+            parts = partition(spec, y, 20, seed=1)
+            allidx = np.concatenate([p for p in parts if len(p)])
+            assert len(np.unique(allidx)) == len(allidx)
+
+    def test_seed_determinism(self):
+        y = np.arange(2000) % 10
+        for spec in ("iid", "dirichlet:0.4", "shards:2"):
+            a = partition(spec, y, 16, seed=9)
+            b = partition(spec, y, 16, seed=9)
+            for pa, pb in zip(a, b):
+                np.testing.assert_array_equal(pa, pb)
+            c = partition(spec, y, 16, seed=10)
+            assert any(not np.array_equal(pa, pc)
+                       for pa, pc in zip(a, c))
+
+    def test_dirichlet_large_alpha_approx_iid(self):
+        """alpha -> inf: per-client class proportions ~ the global
+        ones, so histograms are near-uniform across clients."""
+        y = np.arange(10000) % 10
+        parts = partition("dirichlet:100000", y, 10, seed=0)
+        h = label_histograms(y, parts, num_classes=10).astype(float)
+        props = h / h.sum(axis=1, keepdims=True)
+        assert np.abs(props - 0.1).max() < 0.03
+
+    def test_dirichlet_small_alpha_single_label(self):
+        """alpha -> 0: each class concentrates on ~1 client, so most
+        clients hold very few distinct classes."""
+        y = np.arange(10000) % 10
+        parts = partition("dirichlet:0.0001", y, 10, seed=0)
+        h = label_histograms(y, parts, num_classes=10)
+        n_classes = (h > 0).sum(axis=1)
+        assert np.median(n_classes[n_classes > 0]) <= 2
+        # ... and each class's mass lives almost entirely on one client
+        top = h.max(axis=0) / np.maximum(h.sum(axis=0), 1)
+        assert top.min() > 0.95
+
+    @given(alpha=st.floats(0.05, 50.0), n=st.integers(2, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_dirichlet_property_exhaustive_and_deterministic(
+            self, alpha, n):
+        y = np.arange(1200) % 6
+        parts = partition(f"dirichlet:{alpha}", y, n, seed=2)
+        assert len(parts) == n
+        allidx = np.concatenate([p for p in parts if len(p)])
+        assert len(allidx) == len(y)
+        assert len(np.unique(allidx)) == len(y)
+        again = partition(f"dirichlet:{alpha}", y, n, seed=2)
+        for pa, pb in zip(parts, again):
+            np.testing.assert_array_equal(pa, pb)
+
+    def test_dirichlet_rejects_nonpositive_alpha(self):
+        with pytest.raises(ValueError):
+            partition("dirichlet:0", np.arange(100) % 10, 4)
+
+    def test_shards_per_client_counts(self):
+        y = np.arange(1000) % 10
+        parts = partition("shards:2", y, 10, seed=0)
+        sizes = np.array([len(p) for p in parts])
+        assert sizes.sum() == 1000
+        # 2 shards of ~50 each per client
+        assert np.abs(sizes - 100).max() <= 2
+        h = label_histograms(y, parts, num_classes=10)
+        # the classic shard split: few classes per client
+        assert ((h > 0).sum(axis=1) <= 4).all()
+
+
+# ----------------------------------------------------------------------
+def _mini_engine(**over):
+    cfg = dict(strategy="fedhap", stations="one_hap", **QUICK)
+    cfg.update(over)
+    return RoundEngine(SimConfig(**cfg))
+
+
+class TestStaticPlane:
+    def test_bit_identical_to_trainer_sampler(self):
+        """The static plane must consume the engine rng exactly as the
+        historical direct sampler did."""
+        e1 = _mini_engine()
+        e2 = _mini_engine()
+        assert isinstance(e1.client_plane, StaticPlane)
+        sats = list(range(e1.n_sats))
+        a = e1.sample_indices(sats, 0.0)
+        b = e2.trainer.sample_client_indices(
+            e2.fd, sats, e2.cfg.local_steps, e2.rng)
+        np.testing.assert_array_equal(a, b)
+        # and the streams stay aligned across repeated resolves
+        np.testing.assert_array_equal(
+            e1.sample_indices(sats, 99.0),
+            e2.trainer.sample_client_indices(
+                e2.fd, sats, e2.cfg.local_steps, e2.rng))
+
+
+class TestSampledPlane:
+    def test_indices_stay_within_assigned_clients(self):
+        eng = _mini_engine(clients="sampled:0.5x80")
+        plane = eng.client_plane
+        sel = plane.sample_indices(range(eng.n_sats), 0.0)
+        assert sel.shape == (eng.n_sats,
+                             eng.cfg.local_steps * eng.cfg.batch_size)
+        for sat in range(eng.n_sats):
+            ids = plane._sat_client_ids(sat)
+            allowed = np.concatenate(
+                [plane.clients.client_indices(c) for c in ids])
+            assert np.isin(sel[sat], allowed).all()
+
+    def test_round_stream_deterministic_and_varying(self):
+        e1 = _mini_engine(clients="sampled:0.3x80")
+        e2 = _mini_engine(clients="sampled:0.3x80")
+        sats = range(e1.n_sats)
+        r0a = e1.sample_indices(sats, 0.0)
+        r1a = e1.sample_indices(sats, 60.0)
+        np.testing.assert_array_equal(r0a, e2.sample_indices(sats, 0.0))
+        np.testing.assert_array_equal(r1a, e2.sample_indices(sats, 60.0))
+        assert not np.array_equal(r0a, r1a)   # fresh draw per round
+
+    def test_histograms_expose_noniid_split(self):
+        eng = _mini_engine(clients="sampled:0.5x80",
+                           client_partitioner="dirichlet:0.1")
+        h = eng.client_plane.clients.histograms(num_classes=10)
+        assert h.shape == (80, 10)
+        assert h.sum() == len(eng.fd.labels)
+        nonempty = h[h.sum(axis=1) > 0]
+        assert ((nonempty > 0).sum(axis=1) < 10).any()   # skewed rows
+
+    def test_fused_matches_per_round_histories(self):
+        for strategy, stations in (("fedhap", "one_hap"),
+                                   ("fedhap_async", "haps:2")):
+            over = dict(clients="sampled:0.4x120",
+                        client_partitioner="dirichlet:0.5",
+                        strategy=strategy, stations=stations)
+            ref = _mini_engine(**over).run(fused=False)
+            fus = _mini_engine(**over).run(fused=True)
+            assert len(ref.history) == len(fus.history)
+            for (ta, ea, aa), (tb, eb, ab) in zip(ref.history,
+                                                  fus.history):
+                assert (ta, ea) == (tb, eb)
+                assert np.isclose(aa, ab)
+
+    def test_bad_specs_raise(self):
+        with pytest.raises(ValueError):
+            _mini_engine(clients="sampled:")
+        with pytest.raises(ValueError):
+            _mini_engine(clients="sampled:1.5")
+        with pytest.raises(ValueError):
+            _mini_engine(clients="bogus:1")
+
+
+class TestGeoPlane:
+    def test_acquisition_monotone_and_growing(self):
+        eng = _mini_engine(clients="geo:16x200@0.3")
+        plane = eng.client_plane
+        assert isinstance(plane, GeoPlane)
+        f0 = plane.acquired_fraction(0.0)
+        f1 = plane.acquired_fraction(eng.horizon_s / 2)
+        f2 = plane.acquired_fraction(eng.horizon_s)
+        assert f0 <= f1 <= f2
+        assert f2 > f0          # coverage must actually accrue
+        assert f2 > 0.5         # most (region, sat) pairs cross in 36 h
+
+    def test_samples_only_from_acquired_regions(self):
+        eng = _mini_engine(clients="geo:16x200@1.0")
+        plane = eng.client_plane
+        t = eng.horizon_s / 4
+        acq = plane.acquired_mask(t)
+        sel = plane.sample_indices(range(eng.n_sats), t)
+        region_of_sample = np.full(len(eng.fd.labels), -1)
+        for c in range(plane.clients.num_clients):
+            region_of_sample[plane.clients.client_indices(c)] = \
+                plane.region_of[c]
+        for sat in range(eng.n_sats):
+            regs = np.unique(region_of_sample[sel[sat]])
+            ok = acq[:, sat]
+            if ok.any():
+                assert all(ok[r] for r in regs if r >= 0)
+
+    def test_bootstrap_before_first_crossing(self):
+        """A satellite with nothing acquired falls back to its static
+        shard instead of failing."""
+        eng = _mini_engine(clients="geo:16x200@0.5")
+        plane = eng.client_plane
+        plane.acq_t = np.full_like(plane.acq_t, 10**9)   # nothing yet
+        sel = plane.sample_indices([0, 1], 0.0)
+        for i, sat in enumerate((0, 1)):
+            assert np.isin(sel[i],
+                           eng.fd.client_indices[sat]).all()
+
+    def test_fused_matches_per_round_histories(self):
+        over = dict(clients="geo:16x300@0.3")
+        ref = _mini_engine(**over).run(fused=False)
+        fus = _mini_engine(**over).run(fused=True)
+        assert len(ref.history) == len(fus.history)
+        for (ta, ea, aa), (tb, eb, ab) in zip(ref.history, fus.history):
+            assert (ta, ea) == (tb, eb)
+            assert np.isclose(aa, ab)
+
+    def test_first_crossing_table_matches_bruteforce(self):
+        from repro.orbits import (WalkerConstellation,
+                                  effective_min_elevation_deg,
+                                  mask_from_positions, stations_eci)
+        const = WalkerConstellation(2, 3, 2_000_000.0, 80.0)
+        grid_t = np.arange(200) * 60.0
+        sat_pos = const.positions_eci(grid_t)
+        regions = region_grid(6)
+        got = first_crossing_table(regions, grid_t, sat_pos, chunk=37)
+        full = mask_from_positions(
+            stations_eci(regions, grid_t), sat_pos,
+            effective_min_elevation_deg(regions))
+        T = len(grid_t)
+        want = np.where(full.any(axis=2), full.argmax(axis=2), T)
+        np.testing.assert_array_equal(got, want)
+
+    def test_region_grid_counts(self):
+        for n in (1, 7, 16, 64):
+            assert len(region_grid(n)) == n
+
+
+class TestPlaneGrammar:
+    def test_geo_requires_geometry(self):
+        x = np.zeros((100, 4), dtype=np.float32)
+        y = (np.arange(100) % 10).astype(np.int32)
+        fd = FederatedData(x, y, [np.arange(50), np.arange(50, 100)])
+
+        class _T:
+            batch_size = 4
+
+            @staticmethod
+            def sample_client_indices(*a):
+                raise AssertionError
+
+        with pytest.raises(ValueError):
+            build_plane("geo:4x50", trainer=_T(), fd=fd,
+                        rng=np.random.default_rng(0), local_steps=1)
+
+    def test_virtual_clients_csr_roundtrip(self):
+        parts = [np.array([3, 5]), np.empty(0, dtype=np.int64),
+                 np.array([0, 1, 2])]
+        vc = VirtualClients.from_parts(parts, np.arange(6) % 2)
+        assert vc.num_clients == 3
+        np.testing.assert_array_equal(vc.sizes, [2, 0, 3])
+        np.testing.assert_array_equal(vc.client_indices(0), [3, 5])
+        np.testing.assert_array_equal(vc.client_indices(1), [])
+        np.testing.assert_array_equal(vc.client_indices(2), [0, 1, 2])
+        h = vc.histograms(2)
+        assert h.sum() == 5

@@ -84,6 +84,39 @@ class TestPartition:
         allidx = np.concatenate(parts)
         assert len(np.unique(allidx)) == len(allidx)
 
+    def test_noniid_multi_shell_splits_within_each_shell(self):
+        """Regression: two stacked 5-orbit shells must each get the
+        paper's 3A+2B orbit mix, not a global 6A+4B that assigns the
+        whole second shell to class group B."""
+        y = np.arange(4000) % 10
+        shells = np.array([0] * 5 + [1] * 5)
+        parts = partition_noniid_by_orbit(
+            y, num_orbits=10, sats_per_orbit=2, seed=0,
+            orbit_shells=shells)
+        group_a = []
+        for orbit in range(10):
+            classes = set(y[parts[orbit * 2]]) | set(y[parts[orbit * 2 + 1]])
+            assert (classes <= {0, 1, 2, 3, 4, 5}
+                    or classes <= {6, 7, 8, 9})
+            group_a.append(classes <= {0, 1, 2, 3, 4, 5})
+        assert group_a == [True] * 3 + [False] * 2 + [True] * 3 + [False] * 2
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(allidx)
+
+    def test_noniid_single_shell_matches_legacy(self):
+        """orbit_shells=zeros must reproduce the historical split."""
+        y = np.arange(3000) % 10
+        a = partition_noniid_by_orbit(y, 5, 4, seed=7)
+        b = partition_noniid_by_orbit(y, 5, 4, seed=7,
+                                      orbit_shells=np.zeros(5, int))
+        for pa, pb in zip(a, b):
+            np.testing.assert_array_equal(pa, pb)
+
+    def test_noniid_rejects_bad_shell_table(self):
+        y = np.arange(100) % 10
+        with pytest.raises(ValueError):
+            partition_noniid_by_orbit(y, 5, 2, orbit_shells=np.zeros(4, int))
+
 
 class TestLoader:
     def test_batch_iterator_shapes_and_epochs(self):
@@ -106,6 +139,36 @@ class TestLoader:
         (e1,) = next(it)
         assert not np.array_equal(e0, e1)
         assert set(e0) == set(e1)
+
+    def test_small_shard_pads_with_replacement(self):
+        """Shards below batch_size pad per epoch instead of raising —
+        virtual-client splits routinely go below one batch."""
+        x = np.arange(5, dtype=np.float32)
+        it = BatchIterator([x], batch_size=32, seed=0)
+        (b,) = next(it)
+        assert b.shape == (32,)
+        assert set(b) == set(x)          # every sample still appears
+        assert it.epoch_batches() == 1
+        (b2,) = next(it)                 # second epoch re-pads fine
+        assert b2.shape == (32,)
+        assert it.epoch == 1
+
+    def test_small_shard_padding_is_deterministic(self):
+        x = np.arange(3, dtype=np.float32)
+        (a,) = next(BatchIterator([x], batch_size=8, seed=5))
+        (b,) = next(BatchIterator([x], batch_size=8, seed=5))
+        np.testing.assert_array_equal(a, b)
+
+    def test_empty_dataset_still_raises(self):
+        with pytest.raises(ValueError):
+            BatchIterator([np.empty(0)], batch_size=4)
+
+    def test_exact_batch_boundary_unchanged(self):
+        x = np.arange(32, dtype=np.float32)
+        it = BatchIterator([x], batch_size=32, seed=0)
+        (b,) = next(it)
+        assert sorted(b) == sorted(x)    # no padding at n == batch_size
+        assert it.epoch_batches() == 1
 
     def test_federated_data_sizes(self):
         x, y = make_digits_dataset(800, seed=0)
