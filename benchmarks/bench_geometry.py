@@ -679,6 +679,71 @@ def bench_client_plane(smoke: bool) -> list[dict]:
     return out
 
 
+_FAULTS_SPEC = ("sat_outage=0.05,isl_drop=0.1,upload_loss=0.15,"
+                "hap_outage=0.05,mtbf_h=2,mttr_h=1")
+
+
+def bench_faults(smoke: bool) -> dict:
+    """Fault-plane cost: scheduling overhead + accuracy vs outage rate.
+
+    Overhead: the fedhap plan phase on a clean vs a faulty engine of
+    the same shell — the fault plane's per-round cost is pure plan-side
+    (masked tables, retry pricing), so plan rounds/s is the metric.
+    The faulty plane must stay above 0.5x the clean plan throughput
+    (guarded as ``faults.overhead.vs_clean`` by check_regression).
+
+    Sweep: final accuracy of a small fedhap sim across outage rates —
+    diagnostic trend data (graceful degradation), not a guarded rate.
+    """
+    shell = (6, 10) if smoke else (10, 20)
+    horizon_h, rounds = (12.0, 4) if smoke else (24.0, 8)
+
+    def make(faults: str) -> tuple[RoundEngine, float]:
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        num_orbits=shell[0], sats_per_orbit=shell[1],
+                        horizon_h=horizon_h, time_step_s=60.0,
+                        faults=faults, **_SIM_LITE)
+        t0 = time.perf_counter()
+        eng = RoundEngine(cfg)
+        return eng, time.perf_counter() - t0
+
+    eng, clean_init = make("")
+    done_c, wall_c = _plan_drive(eng, rounds)
+    clean_rps = done_c / wall_c
+    eng, faulty_init = make(_FAULTS_SPEC)
+    done_f, wall_f = _plan_drive(eng, rounds)
+    faulty_rps = done_f / wall_f
+    overhead = {
+        "shell": f"{shell[0]}x{shell[1]}", "stations": "two_hap",
+        "spec": _FAULTS_SPEC,
+        "clean_init_s": round(clean_init, 2),
+        "faulty_init_s": round(faulty_init, 2),
+        "clean_plan_rps": round(clean_rps, 2),
+        "faulty_plan_rps": round(faulty_rps, 2),
+        "vs_clean": round(faulty_rps / clean_rps, 3),
+    }
+    print(f"  faults[overhead x {overhead['shell']}]: "
+          f"{faulty_rps:.2f} faulty vs {clean_rps:.2f} clean plan "
+          f"rounds/s ({overhead['vs_clean']:.2f}x)", flush=True)
+
+    sweep = []
+    for rate in (0.0, 0.05, 0.2):
+        spec = "" if rate == 0.0 else (
+            f"sat_outage={rate},upload_loss={rate},"
+            f"hap_outage={rate},mtbf_h=2,mttr_h=1")
+        cfg = SimConfig(strategy="fedhap", stations="two_hap",
+                        num_orbits=5, sats_per_orbit=8,
+                        horizon_h=24.0, time_step_s=60.0,
+                        max_rounds=3 if smoke else 6,
+                        local_steps=2, faults=spec, **_SIM_LITE)
+        res = RoundEngine(cfg).run(fused=True)
+        sweep.append({"outage_rate": rate, "rounds": res.rounds,
+                      "final_acc": round(res.final_accuracy, 4)})
+        print(f"  faults[sweep rate={rate}]: {res.rounds} rounds, "
+              f"acc {res.final_accuracy:.4f}", flush=True)
+    return {"overhead": overhead, "accuracy_sweep": sweep}
+
+
 def run(smoke: bool = False, sim_wallclock: bool = False,
         rounds: int = 25) -> dict:
     doc: dict = {"schema": 1, "smoke": smoke}
@@ -730,6 +795,10 @@ def run(smoke: bool = False, sim_wallclock: bool = False,
 
     print("client_plane:", flush=True)
     doc["client_plane"] = bench_client_plane(smoke)
+    gc.collect()
+
+    print("faults:", flush=True)
+    doc["faults"] = bench_faults(smoke)
 
     if sim_wallclock:
         from benchmarks.sim_wallclock import report
@@ -756,6 +825,10 @@ def main() -> None:
     ap.add_argument("--sharded-worker", metavar="SPEC_JSON",
                     help="internal: measure one (scenario, device "
                          "count) sample in this process")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="run only the fault-plane overhead + "
+                         "accuracy-vs-outage section (the CI chaos "
+                         "tier)")
     ap.add_argument("--out", default=str(DEFAULT_OUT),
                     help="where to write BENCH_sim.json")
     args = ap.parse_args()
@@ -765,6 +838,10 @@ def main() -> None:
     if args.sharded_only:
         doc = {"schema": 1, "smoke": args.smoke,
                "sim_sharded": bench_sim_sharded(args.smoke)}
+    elif args.faults_only:
+        print("faults:", flush=True)
+        doc = {"schema": 1, "smoke": args.smoke,
+               "faults": bench_faults(args.smoke)}
     else:
         doc = run(smoke=args.smoke, sim_wallclock=args.sim_wallclock,
                   rounds=args.rounds)

@@ -68,6 +68,13 @@ def _rate_metrics(doc: dict) -> dict[str, float]:
     for row in doc.get("client_plane") or []:
         put(f"client_plane[{row['plane']} x {row['shell']}].plan_rps",
             row.get("plan_rps"))
+    faults = doc.get("faults") or {}
+    over = faults.get("overhead") or {}
+    if over:
+        base = f"faults.overhead[{over.get('shell')}]"
+        put(f"{base}.clean_plan_rps", over.get("clean_plan_rps"))
+        put(f"{base}.faulty_plan_rps", over.get("faulty_plan_rps"))
+        # the accuracy_sweep is diagnostic trend data, not a rate guard
     wall = doc.get("sim_wallclock") or {}
     if wall:
         put("sim_wallclock.engine_rps", wall.get("engine_rps"))

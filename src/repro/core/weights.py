@@ -68,10 +68,11 @@ def chain_weights(
     sizes = np.asarray(sizes, dtype=np.float64)
     n = len(sizes)
     if mode == "exact":
-        return sizes / sizes.sum()
+        total = sizes.sum()
+        return sizes / total if total > 0 else np.zeros(n)
     if mode != "paper":
         raise ValueError(mode)
-    gammas = sizes / m_orbit_total
+    gammas = sizes / (m_orbit_total if m_orbit_total > 0 else 1.0)
     gammas[0] = 1.0
     lam = np.empty(n)
     suffix = 1.0
@@ -109,6 +110,10 @@ def chain_stats(
     sizes = xp.asarray(sizes)
     k = visible.shape[-1]
     m_orbit = sizes.sum(axis=-1, keepdims=True)
+    # Zero-total guard (Eq. 15): a ring whose surviving mass is zero
+    # divides by 1 instead of 0 and is zeroed below — rings with mass
+    # are untouched bit-for-bit.
+    safe_orbit = xp.where(m_orbit > 0, m_orbit, 1.0)
 
     # Forward walk: fold the invisible successors of each slot until the
     # segment's terminal visible satellite (which is NOT a member).
@@ -120,7 +125,8 @@ def chain_stats(
         nxt_sz = xp.roll(sizes, -step, axis=-1)
         active = (~terminated) & (~nxt_vis)
         if partial_mode == "paper":
-            suffix = xp.where(active, suffix * (1.0 - nxt_sz / m_orbit),
+            suffix = xp.where(active,
+                              suffix * (1.0 - nxt_sz / safe_orbit),
                               suffix)
         seg = xp.where(active, seg + nxt_sz, seg)
         terminated = terminated | nxt_vis
@@ -138,9 +144,10 @@ def chain_stats(
 
     if partial_mode == "paper":
         # The origin's gamma is 1 by definition (it seeds the chain).
-        lam = xp.where(visible, 1.0, sizes / m_orbit) * suffix
+        lam = xp.where(visible, 1.0, sizes / safe_orbit) * suffix
     else:
-        lam = sizes / seg_mass
+        safe_seg = xp.where(seg_mass > 0, seg_mass, 1.0)
+        lam = sizes / safe_seg
 
     any_vis = visible.any(axis=-1, keepdims=True)
     lam = xp.where(any_vis, lam, 0.0)
@@ -181,6 +188,12 @@ def mu_from_chain(
     Inputs are batched ``(L, K)`` (orbits x ring); returns ``mu`` of the
     same shape with ``w_global = sum mu * w`` (mu sums to 1 when every
     orbit has a visible satellite).
+
+    Zero-total guard (Eq. 15/16): an orbit (paper weighting) or a whole
+    constellation (global weighting) whose surviving data mass is zero
+    yields exactly-zero mu rows instead of NaN — the caller's fold then
+    carries the previous params forward. Non-degenerate inputs take the
+    original division bit-for-bit.
     """
     if orbit_weighting not in ORBIT_WEIGHTINGS:
         raise ValueError(orbit_weighting)
@@ -188,8 +201,27 @@ def mu_from_chain(
     m_orbit = sizes.sum(axis=-1, keepdims=True)
     if orbit_weighting == "paper":
         n_orbits = lam.shape[0]
-        return seg_mass / m_orbit * lam / n_orbits
-    return seg_mass / sizes.sum() * lam
+        safe_orbit = xp.where(m_orbit > 0, m_orbit, 1.0)
+        return seg_mass / safe_orbit * lam / n_orbits
+    total = sizes.sum()
+    safe_total = xp.where(total > 0, total, 1.0)
+    return seg_mass / safe_total * lam
+
+
+def renormalize(weights: Any, xp: Any = np) -> Any:
+    """Renormalize aggregation weights over surviving uploads.
+
+    Used by the fault plane: after lost uploads zero their satellites'
+    entries, the survivors are rescaled to unit mass so the fold stays
+    an affine combination. An all-zero vector (a round that lost every
+    upload) stays all-zero — the executor's zero-weight fold then
+    contributes nothing and the previous params carry forward, never
+    NaN.
+    """
+    w = xp.asarray(weights)
+    total = w.sum()
+    safe = xp.where(total > 0, total, 1.0)
+    return xp.where(total > 0, w / safe, xp.zeros_like(w))
 
 
 def staleness_discount(staleness: Any, power: float = 0.5,
@@ -232,5 +264,5 @@ def mu_weights(
 __all__ = [
     "PARTIAL_MODES", "ORBIT_WEIGHTINGS",
     "chain_weights", "chain_stats", "segment_ends",
-    "mu_from_chain", "mu_weights", "staleness_discount",
+    "mu_from_chain", "mu_weights", "renormalize", "staleness_discount",
 ]

@@ -158,6 +158,7 @@ class ContactGraph(_GraphOps):
     isl_vis: np.ndarray
     edge_next: np.ndarray
     n_params: int
+    fault_mask: Optional[np.ndarray] = None  # as passed to the builder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +187,7 @@ class SparseContactGraph(_GraphOps):
     nbr_next: np.ndarray       # (E, T) int16/int32 next-contact rows
     n_params: int
     pair_mask: Optional[np.ndarray] = None   # (S, S) candidate filter
+    fault_mask: Optional[np.ndarray] = None  # as passed to the builder
 
     @property
     def n_edges(self) -> int:
@@ -255,9 +257,42 @@ def _reuse_offset(prev: Optional[AnyContactGraph],
     return off
 
 
+def _fault_edges(fault_mask: Optional[np.ndarray],
+                 n_sats: int) -> Optional[np.ndarray]:
+    """Normalize a builder ``fault_mask`` to an ``(S, S)`` bool edge-dead
+    matrix: a 1-D ``(S,)`` mask marks whole satellites failed (every
+    incident edge dies), a 2-D ``(S, S)`` mask marks edge pairs
+    directly. None when nothing is actually masked."""
+    if fault_mask is None:
+        return None
+    fm = np.asarray(fault_mask, dtype=bool)
+    if fm.ndim == 1:
+        if fm.shape != (n_sats,):
+            raise ValueError(f"fault_mask shape {fm.shape} != ({n_sats},)")
+        dead = fm[:, None] | fm[None, :]
+    elif fm.shape == (n_sats, n_sats):
+        dead = fm
+    else:
+        raise ValueError(
+            f"fault_mask must be ({n_sats},) or ({n_sats}, {n_sats}), "
+            f"got {fm.shape}")
+    return dead if dead.any() else None
+
+
+def _mask_compat(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> bool:
+    """Reuse compatibility of two builder masks (pair or fault): both
+    absent, the same object, or elementwise equal."""
+    if (a is None) != (b is None):
+        return False
+    return a is None or a is b or (a.shape == np.shape(b)
+                                   and np.array_equal(a, b))
+
+
 def _csr_compile(a_ids: np.ndarray, b_ids: np.ndarray, vis: np.ndarray,
                  grid_t: np.ndarray, positions: np.ndarray, n_params: int,
-                 pair_mask: Optional[np.ndarray]) -> SparseContactGraph:
+                 pair_mask: Optional[np.ndarray],
+                 fault_mask: Optional[np.ndarray] = None
+                 ) -> SparseContactGraph:
     """Compact an (E0, T) candidate-pair LoS block into CSR form: drop
     contact-free pairs, sort rows by (a, b), build row pointers and the
     per-edge next-contact table."""
@@ -274,7 +309,7 @@ def _csr_compile(a_ids: np.ndarray, b_ids: np.ndarray, vis: np.ndarray,
         nbr_row=a_ids.astype(np.int32), nbr_ids=b_ids.astype(np.int32),
         nbr_vis=vis,
         nbr_next=next_contact_table(vis, dtype=_edge_dtype(len(grid_t))),
-        n_params=n_params, pair_mask=pair_mask)
+        n_params=n_params, pair_mask=pair_mask, fault_mask=fault_mask)
 
 
 def _pair_overlap_vis(prev: SparseContactGraph, off: int, n_ov: int,
@@ -304,6 +339,7 @@ def build_contact_graph(
     sparse: bool = False,
     pair_mask: Optional[np.ndarray] = None,
     reuse: Optional[AnyContactGraph] = None,
+    fault_mask: Optional[np.ndarray] = None,
 ) -> AnyContactGraph:
     """Compile the time-expanded ISL contact graph for a constellation.
 
@@ -327,6 +363,17 @@ def build_contact_graph(
     recomputed — bit-equal to a cold build, since the LoS test is
     elementwise on identical position slices. Incompatible ``reuse``
     (different step/phase, dense vs sparse, different mask) is ignored.
+
+    ``fault_mask`` degrades the graph for fault injection
+    (``repro.faults``): a 1-D ``(S,)`` bool marks whole satellites
+    failed (every incident edge severed), a 2-D ``(S, S)`` bool marks
+    edge pairs directly (e.g. failed ISL terminal acquisitions). The
+    mask is time-constant, applied to the LoS series before the
+    next-contact compile on both the dense and CSR paths, and recorded
+    on the graph: incremental ``reuse`` is honored only when the
+    previous window carried the same mask — overlap columns copied from
+    such a window are already masked, so re-masking is idempotent and
+    the advance stays bit-equal to a cold masked build.
     """
     grid_t = np.asarray(grid_t, dtype=np.float64)
     if positions is None:
@@ -336,10 +383,13 @@ def build_contact_graph(
         raise ValueError("pair_mask requires sparse=True (a dense graph "
                          "with silently missing pairs would break the "
                          "oracle semantics)")
+    dead = _fault_edges(fault_mask, S)
 
     if not sparse:
-        off = _reuse_offset(reuse, grid_t) \
-            if isinstance(reuse, ContactGraph) else None
+        off = None
+        if isinstance(reuse, ContactGraph) and \
+                _mask_compat(reuse.fault_mask, fault_mask):
+            off = _reuse_offset(reuse, grid_t)
         if off is None:
             isl = isl_mask_from_positions(positions, grazing_altitude_m)
         else:
@@ -349,19 +399,18 @@ def build_contact_graph(
             if n_ov < T:
                 isl[:, :, n_ov:] = isl_mask_from_positions(
                     positions[:, n_ov:], grazing_altitude_m)
+        if dead is not None:
+            isl &= ~dead[:, :, None]     # idempotent on reused columns
         edge_next = next_contact_table(isl, dtype=_edge_dtype(T))
         return ContactGraph(grid_t=grid_t, positions=positions,
                             isl_vis=isl, edge_next=edge_next,
-                            n_params=n_params)
+                            n_params=n_params, fault_mask=fault_mask)
 
     prev = reuse if isinstance(reuse, SparseContactGraph) else None
-    if prev is not None:
-        pm_ok = (prev.pair_mask is None) == (pair_mask is None)
-        if pm_ok and pair_mask is not None:
-            pm_ok = prev.pair_mask is pair_mask or \
-                np.array_equal(prev.pair_mask, pair_mask)
-        if not pm_ok:
-            prev = None
+    if prev is not None and not (
+            _mask_compat(prev.pair_mask, pair_mask)
+            and _mask_compat(prev.fault_mask, fault_mask)):
+        prev = None
     off = _reuse_offset(prev, grid_t)
 
     if pair_mask is not None:
@@ -379,21 +428,27 @@ def build_contact_graph(
             if n_ov < T:
                 vis[:, n_ov:] = isl_pairs_visible(
                     positions[:, n_ov:], a_ids, b_ids, grazing_altitude_m)
+        if dead is not None:
+            vis[dead[a_ids, b_ids]] = False
         return _csr_compile(a_ids, b_ids, vis, grid_t, positions,
-                            n_params, pair_mask)
+                            n_params, pair_mask, fault_mask)
 
     # Unmasked sparse build: any-contact adjacency over all pairs.
     if off is None:
         isl = isl_mask_from_positions(positions, grazing_altitude_m)
+        if dead is not None:
+            isl &= ~dead[:, :, None]
         a_ids, b_ids = np.nonzero(isl.any(axis=-1))
         return _csr_compile(a_ids, b_ids, isl[a_ids, b_ids], grid_t,
-                            positions, n_params, None)
+                            positions, n_params, None, fault_mask)
     # Incremental: union of the previous window's pairs and pairs with
     # contact in the fresh tail; peak memory is S^2 * tail, not S^2 * T.
     n_ov = min(prev.n_steps - off, T)
     if n_ov < T:
         tail = isl_mask_from_positions(positions[:, n_ov:],
                                        grazing_altitude_m)
+        if dead is not None:
+            tail &= ~dead[:, :, None]
         adj = tail.any(axis=-1)
     else:
         tail, adj = None, np.zeros((S, S), dtype=bool)
@@ -404,7 +459,7 @@ def build_contact_graph(
     if tail is not None:
         vis[:, n_ov:] = tail[a_ids, b_ids]
     return _csr_compile(a_ids, b_ids, vis, grid_t, positions,
-                        n_params, None)
+                        n_params, None, fault_mask)
 
 
 def subgraph(graph: "AnyContactGraph | WindowedRouter",
@@ -1050,7 +1105,12 @@ def elect_sinks(
     (:func:`onehot_chain_weights`, precomputable via ``lam``), i.e.
     exactly the weights the intra-plane propagation chain gives each
     member's model — plus the candidate's exit cost. The argmin
-    candidate per orbit wins.
+    candidate per orbit wins; **equal scores resolve to the lowest ring
+    slot** (``np.argmin`` returns the first minimum), so elections —
+    including fault-induced re-elections, where a downed sink's exit
+    prices inf and several survivors may tie — are deterministic and
+    reproducible across backends and batch shapes
+    (``RoundEngine.elect_sinks_batch`` scores through this same argmin).
 
     On a :class:`WindowedRouter`, the chain is cut as soon as every
     *member-column* label is settled (a ``stop`` hook): the scores only
@@ -1090,6 +1150,9 @@ def elect_sinks(
         lam = onehot_chain_weights(sizes, partial_mode)
     delay = arrd - (t0v[:, None, None] if t0v.ndim == 1 else t0v)
     score = np.where(lam > 0, lam * delay, 0.0).sum(axis=-1) + exit_cost_s
+    # Deterministic tie-break: argmin takes the FIRST minimum, i.e. the
+    # lowest ring slot — documented contract, relied on for reproducible
+    # fault-induced re-elections (tests/test_faults.py).
     slots = np.argmin(score, axis=1).astype(np.int64)
     l_idx = np.arange(L)
     return SinkElection(

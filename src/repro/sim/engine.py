@@ -80,6 +80,46 @@ the dataset (``repro.clients.partitioners`` registry: ``iid``,
 ``dirichlet:ALPHA``, ``shards:K``); aggregation masses stay the static
 Eq.-14 per-satellite sizes, so plan phases and the donated megastep
 are untouched by the plane choice.
+
+``SimConfig.faults`` grammar (the deterministic fault plane,
+``repro.faults.plane``) — seeded per-entity outage/loss tables resolved
+once at engine construction, indexed by grid time so the fused and
+per-round paths consume bit-identical fault schedules::
+
+    faults:sat_outage=0.02,isl_drop=0.05,upload_loss=0.1,hap_outage=0.01
+          [,mtbf_h=6,mttr_h=0.5]
+
+- ``sat_outage`` / ``hap_outage`` — steady-state downtime fraction of
+  satellites / HAP stations (alternating-renewal up/down windows with
+  means ``mtbf_h`` / ``mttr_h``; ground stations never fault). Outage
+  windows mask ``vis`` before any derived table is built, so every
+  strategy's contact queries — next-contact, sink elections, upload
+  pricing — degrade with no per-strategy code: an elected sink that is
+  down in its upload window prices its exit through the next up
+  contact, i.e. re-election falls out of the masked scores. A
+  satellite in safe mode keeps training on board; only its station
+  links sever.
+- ``isl_drop`` — ISL terminal pairs failed for the whole run: a
+  constant symmetric edge mask handed to every contact-graph build
+  (``build_contact_graph(fault_mask=...)``), exact under incremental
+  ``reuse=`` advances.
+- ``upload_loss`` — per-(satellite, grid-step) lost-upload
+  probability. Cycle strategies retry through the next contact with
+  capped backoff (:meth:`RoundEngine.upload_end`); round strategies
+  zero the lost members' Eq. 14-16 weights and renormalize over the
+  surviving uploads — a round that loses every upload folds nothing
+  and carries params forward (never NaN).
+
+An empty spec (the default) builds no fault plane at all: the engine
+takes the exact pre-fault code path, bit-identical histories included.
+
+Crash recovery: ``run(checkpoint_dir=..., resume=True)`` snapshots
+(params + strategy device state, run counters, rng state, client-plane
+counters, history) through :mod:`repro.checkpoint` every
+``checkpoint_every`` events at block boundaries; a resumed run replans
+from the restored clock and is bit-identical to an uninterrupted one
+(the fault/client planes are time-indexed, so nothing else needs
+restoring).
 """
 from __future__ import annotations
 
@@ -125,7 +165,13 @@ from repro.orbits.routing import (
     subgraph,
 )
 from repro.orbits.visibility import DALLAS, ROLLA
-from repro.sim.strategies import RunState, Strategy, get_strategy
+from repro.faults import MAX_UPLOAD_RETRIES, FaultPlane, parse_faults
+from repro.sim.strategies import (
+    RoundStrategy,
+    RunState,
+    Strategy,
+    get_strategy,
+)
 from repro.sim.trainer import LocalTrainer
 
 
@@ -178,6 +224,10 @@ class SimConfig:
     eval_samples: int = 4000
     target_accuracy: float = 0.995
     seed: int = 0
+    # fault-injection plane: "faults:sat_outage=..,isl_drop=..,
+    # upload_loss=..,hap_outage=..[,mtbf_h=..,mttr_h=..]" (see module
+    # docstring / repro.faults). "" = no plane, the exact pre-fault path.
+    faults: str = ""
     # fedspace / fedsat knobs
     buffer_fraction: float = 0.5
     staleness_power: float = 0.5
@@ -211,6 +261,22 @@ class SimConfig:
             object.__setattr__(self, "altitude_m", specs[0].altitude_m)
             object.__setattr__(
                 self, "inclination_deg", specs[0].inclination_deg)
+
+
+@dataclasses.dataclass
+class _CkptState:
+    """Live checkpoint-driver state for one ``run(checkpoint_dir=)``.
+
+    The engine owns the cadence (save every ``every`` events at safe
+    block boundaries); strategies only hand their device-state template
+    to :meth:`RoundEngine.ckpt_resume` / :meth:`RoundEngine.ckpt_tick`.
+    """
+    directory: Any
+    every: int
+    resume: bool
+    step: int = 0            # monotonically increasing save counter
+    last_saved: int = 0      # s.events at the last snapshot
+    strategy_meta: Any = None  # host-side plan state restored on resume
 
 
 @dataclasses.dataclass
@@ -323,6 +389,27 @@ class RoundEngine:
             effective_min_elevation_deg(self.stations))  # (n_st, n_sat, T)
 
         self._st_is_hap = np.array([s.is_hap for s in self.stations])
+
+        # Fault plane (repro.faults): seeded outage/loss tables on the
+        # same grid. Station/satellite outages mask `vis` HERE — before
+        # any derived table (any_vis, next-contact, elections, upload
+        # pricing) exists — so every contact query degrades with no
+        # per-strategy code; ISL terminal faults feed the contact-graph
+        # builds as a constant edge mask; upload losses are priced in
+        # the plan phases (`upload_survives` / the `upload_end` retry
+        # wrapper). faults="" builds no plane: the pre-fault code path.
+        fault_spec = parse_faults(cfg.faults)
+        self.fault_plane: Optional[FaultPlane] = None
+        self._isl_fault: Optional[np.ndarray] = None
+        if fault_spec.any_faults:
+            self.fault_plane = FaultPlane(
+                fault_spec, seed=cfg.seed, n_sats=self.n_sats,
+                st_is_hap=self._st_is_hap, grid_t=self.grid_t)
+            self.vis &= self.fault_plane.st_up[:, None, :]
+            self.vis &= self.fault_plane.sat_up[None, :, :]
+            if self.fault_plane.has_isl_faults:
+                self._isl_fault = self.fault_plane.isl_fault
+
         table_bytes = len(self.stations) * self.n_sats * n_steps * 4
         if table_bytes <= cfg.delay_table_max_bytes:
             self.shl_table = self._build_delay_table(st_pos, sat_pos)
@@ -387,6 +474,8 @@ class RoundEngine:
 
         # Fused execute backend (built on first use; see `executor`).
         self._executor = None
+        # Checkpoint driver, live only inside a `run(checkpoint_dir=)`.
+        self._ckpt: Optional[_CkptState] = None
 
     # ------------------------------------------------------------ helpers
     @property
@@ -580,6 +669,7 @@ class RoundEngine:
                 self.model_bits // 32,
                 grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
                 positions=self._sat_pos[:, sl],
+                fault_mask=self._isl_fault,
                 reuse=self._find_reuse(self._contact_graphs, i0))
             self._contact_graphs[i0] = graph
             if len(self._contact_graphs) > max(1,
@@ -607,6 +697,7 @@ class RoundEngine:
                 grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
                 positions=self._sat_pos[:, sl],
                 sparse=True, pair_mask=self._same_plane,
+                fault_mask=self._isl_fault,
                 reuse=self._find_reuse(self._intra_graphs, i0))
             self._intra_graphs[i0] = graph
             if len(self._intra_graphs) > max(1,
@@ -664,7 +755,7 @@ class RoundEngine:
         return build_contact_graph(
             self.constellation, self.grid_t, self.model_bits // 32,
             grazing_altitude_m=self.cfg.isl_grazing_altitude_m,
-            positions=self._sat_pos)
+            positions=self._sat_pos, fault_mask=self._isl_fault)
 
     def route_exit_end(self, sat_idx: int, t_s: float) -> float:
         """Earliest completed station upload reachable from ``sat_idx``
@@ -702,7 +793,10 @@ class RoundEngine:
         allsat = np.arange(self.n_sats)[None, :]
 
         def best_ends(a: np.ndarray) -> np.ndarray:
-            return self.station_upload_end(allsat, a).min(axis=1)
+            # Lost-upload-aware pricing: under a fault plane a routed
+            # exit retries through later contacts (upload_end is still
+            # monotone in arrival time, so bound-pruning stays exact).
+            return self.upload_end(allsat, a).min(axis=1)
 
         if isinstance(graph, WindowedRouter):
             def exits_settled(a: np.ndarray, t_next: float) -> bool:
@@ -757,6 +851,66 @@ class RoundEngine:
         owner = self.vis[:, sat, jj].argmax(axis=0)
         shl = self.shl_delays(owner, sat, jj)
         return np.where(ok, tt + shl, np.inf)
+
+    def upload_survives(self, sat_idx, t_s) -> np.ndarray:
+        """True where an upload attempted by ``sat_idx`` at sim time
+        ``t_s`` is NOT lost (fault plane ``upload_loss`` stream; inputs
+        broadcast). All-True when no fault plane is configured — the
+        plan phases gate on :attr:`fault_plane` first, so the no-fault
+        path never even asks."""
+        sat = np.asarray(sat_idx, dtype=np.int64)
+        if self.fault_plane is None:
+            return np.ones(np.broadcast_shapes(
+                sat.shape, np.shape(t_s)), dtype=bool)
+        return self.fault_plane.upload_ok[sat, self.tidx(t_s)]
+
+    def upload_end(self, sat_idx, t_s) -> np.ndarray:
+        """:meth:`station_upload_end` made lost-upload aware: an upload
+        whose contact step is marked lost by the fault plane retries
+        through the *next* contact, up to ``MAX_UPLOAD_RETRIES``
+        consecutive losses (then inf — the next-contact-horizon
+        timeout). Monotone nondecreasing in ``t_s`` like the base
+        pricer, so ``cap=``-pruned routed sweeps stay exact. Delegates
+        untouched (bit-identical) when no upload losses are configured.
+        The cycle strategies price their exits through this; round
+        strategies instead drop lost uploads from the fold weights at
+        plan time (a round barrier can't wait on a straggler retry).
+        """
+        plane = self.fault_plane
+        if plane is None or plane.spec.upload_loss <= 0.0:
+            return self.station_upload_end(sat_idx, t_s)
+        step = self.cfg.time_step_s
+        T = self.sat_next.shape[1]
+        sat, t = np.broadcast_arrays(np.asarray(sat_idx, dtype=np.int64),
+                                     np.asarray(t_s, dtype=np.float64))
+        scalar = sat.ndim == 0
+        sat = np.atleast_1d(np.ascontiguousarray(sat))
+        t = np.atleast_1d(t)
+        cur = np.array(t, dtype=np.float64)
+        out = np.full(sat.shape, np.inf)
+        pending = np.ones(sat.shape, dtype=bool)
+        for _ in range(MAX_UPLOAD_RETRIES):
+            fin = pending & np.isfinite(cur) & (cur <= self.horizon_s)
+            if not fin.any():
+                break
+            ti = np.where(fin, cur, 0.0)
+            i0 = self.tidx(ti)
+            j = self.sat_next[sat, i0]
+            tt = ti + np.maximum(0, j - i0) * step
+            ok = fin & (j < T) & (tt <= self.horizon_s)
+            jj = np.minimum(j, T - 1)
+            survives = plane.upload_ok[sat, jj]
+            done = ok & survives
+            if done.any():
+                owner = self.vis[:, sat, jj].argmax(axis=0)
+                shl = self.shl_delays(owner, sat, jj)
+                out = np.where(done, tt + shl, out)
+            # Lost attempts restart after the contact step they burned;
+            # everything else (no contact left / out of horizon) stays
+            # inf and stops retrying.
+            pending = ok & ~survives
+            cur = np.where(pending, (jj + 1) * step, cur)
+        return out[0] if scalar else out
 
     def _orbit_window(self, l: int, i0: int) -> ContactGraph:
         """One induced intra-plane window of orbit ``l`` (LRU-cached
@@ -924,9 +1078,75 @@ class RoundEngine:
                                       self.eval_labels)
         s.history.append((s.t / 3600.0, s.events, s.acc))
 
+    # ----------------------------------------------------- checkpointing
+    def ckpt_resume(self, s: RunState, tree: Any) -> Optional[Any]:
+        """Restore run state from the latest snapshot, if resuming.
+
+        Called once by every fused driver (and the per-round loop)
+        before its first block, with ``tree`` the strategy's device-state
+        template (matching what it hands :meth:`ckpt_tick`). Returns the
+        loaded tree — the caller swaps its device state in — or None
+        when there is nothing to resume. Restores the run counters
+        (t/acc/events/history), the engine rng stream (the static
+        plane's sampler), the sampled/geo client-plane call counter, and
+        stashes the strategy's host plan state for :meth:`ckpt_meta`.
+        The fault plane and all contact/election caches are pure
+        functions of (config, grid time) and rebuild identically.
+        """
+        ck = self._ckpt
+        if ck is None or not ck.resume:
+            return None
+        from repro.checkpoint import load_checkpoint
+        try:
+            loaded, manifest = load_checkpoint(ck.directory, tree)
+        except FileNotFoundError:
+            return None          # nothing saved yet: fresh start
+        meta = manifest["metadata"]
+        s.t = float(meta["t"])
+        s.acc = float(meta["acc"])
+        s.events = int(meta["events"])
+        s.history = [(float(t), int(e), float(a))
+                     for t, e, a in meta["history"]]
+        self.rng.bit_generator.state = meta["rng_state"]
+        if meta.get("plane_calls") is not None and \
+                hasattr(self.client_plane, "_calls"):
+            self.client_plane._calls = int(meta["plane_calls"])
+        ck.strategy_meta = meta.get("strategy_meta")
+        ck.step = int(manifest["step"])
+        ck.last_saved = s.events
+        return loaded
+
+    def ckpt_meta(self) -> Any:
+        """The resumed strategy's host plan state (``strategy_meta`` of
+        the loaded snapshot); None outside a resume."""
+        return None if self._ckpt is None else self._ckpt.strategy_meta
+
+    def ckpt_tick(self, s: RunState, tree: Any, meta: Any = None) -> None:
+        """Snapshot at a safe block boundary when the cadence is due
+        (every ``checkpoint_every`` events since the last save). No-op
+        outside a ``run(checkpoint_dir=)``. ``tree`` is the strategy's
+        full device state; ``meta`` its JSON-able host plan state."""
+        ck = self._ckpt
+        if ck is None or s.events - ck.last_saved < ck.every:
+            return
+        from repro.checkpoint import save_checkpoint
+        ck.step += 1
+        md = {
+            "t": float(s.t), "acc": float(s.acc), "events": int(s.events),
+            "history": [[float(t), int(e), float(a)]
+                        for t, e, a in s.history],
+            "rng_state": self.rng.bit_generator.state,
+            "plane_calls": getattr(self.client_plane, "_calls", None),
+            "strategy_meta": meta,
+        }
+        save_checkpoint(ck.directory, tree, ck.step, metadata=md)
+        ck.last_saved = s.events
+
     # -------------------------------------------------------------- run
     def run(self, strategy: Union[str, Strategy, None] = None,
-            fused: Optional[bool] = None) -> SimResult:
+            fused: Optional[bool] = None, *,
+            checkpoint_dir: Any = None, resume: bool = False,
+            checkpoint_every: int = 8) -> SimResult:
         """Drive the configured (or given) strategy to completion.
 
         ``fused`` selects the execution path (default
@@ -934,19 +1154,46 @@ class RoundEngine:
         rounds/events per donated device dispatch, host only between
         blocks — or the per-round reference loop (one ``step`` per
         round, host-synced; the equivalence oracle for the fused path).
+
+        ``checkpoint_dir`` turns on crash recovery: every
+        ``checkpoint_every`` events the driver snapshots params (plus
+        any strategy device state), run counters, rng/plane counters,
+        and history through :mod:`repro.checkpoint`; ``resume=True``
+        picks up from the latest snapshot and the resumed run is
+        bit-identical to an uninterrupted one (the planes are
+        time-indexed, so replanning from the restored clock reproduces
+        the schedule). On the per-round reference path only the
+        round-barrier strategies checkpoint (cycle/tick strategies keep
+        per-event host trees there; use the fused driver).
         """
         strat = strategy if isinstance(strategy, Strategy) else \
             get_strategy(strategy or self.cfg.strategy)()
         cfg = self.cfg
         use_fused = cfg.fused if fused is None else fused
+        if checkpoint_dir is not None:
+            if not use_fused and not isinstance(strat, RoundStrategy):
+                raise ValueError(
+                    "checkpoint_dir on the per-round reference path is "
+                    "only supported for round-barrier strategies; the "
+                    f"{type(strat).__name__} event loop checkpoints "
+                    "through the fused driver (fused=True)")
+            self._ckpt = _CkptState(checkpoint_dir,
+                                    max(1, int(checkpoint_every)), resume)
         s = RunState(params=self.trainer.init(cfg.seed))
-        if use_fused:
-            strat.run_fused(self, s)
-        else:
-            while (s.events < cfg.max_rounds and s.t <= self.horizon_s
-                   and s.acc < cfg.target_accuracy):
-                if not strat.step(self, s):
-                    break
+        try:
+            if use_fused:
+                strat.run_fused(self, s)
+            else:
+                loaded = self.ckpt_resume(s, {"params": s.params})
+                if loaded is not None:
+                    s.params = loaded["params"]
+                while (s.events < cfg.max_rounds and s.t <= self.horizon_s
+                       and s.acc < cfg.target_accuracy):
+                    if not strat.step(self, s):
+                        break
+                    self.ckpt_tick(s, {"params": s.params})
+        finally:
+            self._ckpt = None
         return SimResult(s.history, s.acc, len(s.history), s.t / 3600.0)
 
 

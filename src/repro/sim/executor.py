@@ -197,6 +197,13 @@ class FusedExecutor:
         after the last valid round and a (K,) host array of accuracies
         (NaN where not evaluated): ONE transfer per block.
 
+        Fault degradation rides this contract with no extra code path:
+        a round that lost every upload arrives as ``valid=False`` (the
+        ``lax.cond`` carries params through unchanged) and a partially
+        lost round arrives with the lost satellites' ``mu`` rows
+        renormalized to zero — zero-weight rows drop out of the fold
+        einsum exactly like padding rows.
+
         With a mesh, dispatches to the satellite-sharded program (same
         plan tensors, same return contract).
         """

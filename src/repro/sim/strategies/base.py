@@ -149,7 +149,12 @@ class RoundStrategy(Strategy):
             s.t = eng.horizon_s + 1.0
             return False
         stacked = eng.train_all(s.params, s.t)
-        s.params = eng.combine(stacked, plan.mu)
+        # A round that lost every upload (fault plane) has an all-zero
+        # mu: fold nothing and carry params forward — never a zero/NaN
+        # model. Training still ran so the client-plane stream stays
+        # aligned with the fused driver's per-round resolves.
+        if np.any(plan.mu):
+            s.params = eng.combine(stacked, plan.mu)
         s.t = plan.t_next
         s.events += 1
         if self.eval_due(eng.cfg, s.events):
@@ -163,6 +168,9 @@ class RoundStrategy(Strategy):
         n_sats = eng.n_sats
         all_clients = list(range(n_sats))
         need = cfg.local_steps * eng.trainer.batch_size
+        loaded = eng.ckpt_resume(s, {"params": s.params})
+        if loaded is not None:
+            s.params = loaded["params"]
         while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
                and s.acc < cfg.target_accuracy):
             # Plan ahead: chain K rounds (plans are param-independent).
@@ -188,21 +196,32 @@ class RoundStrategy(Strategy):
                 idx[i] = eng.sample_indices(all_clients, t_starts[i])
             mu = np.zeros((K, n_sats), dtype=np.float32)
             do_eval = np.zeros(K, dtype=bool)
+            fold_ok = np.zeros(K, dtype=bool)
             for i, plan in enumerate(plans):
                 mu[i] = plan.mu
+                fold_ok[i] = bool(np.any(plan.mu))
                 do_eval[i] = self.eval_due(cfg, s.events + i + 1)
-            valid = np.arange(K) < n
-            s.params, accs = ex.run_block(s.params, idx, mu, do_eval,
-                                          valid)
+            # Rounds that lost every upload (all-zero mu) invalidate
+            # their scan slot: the device carries params through and
+            # skips the on-device eval — the existing dead-row
+            # machinery, no fault-specific executor path. Their due
+            # evals run host-side below on the carried params.
+            valid = (np.arange(K) < n) & fold_ok
+            s.params, accs = ex.run_block(s.params, idx, mu,
+                                          do_eval & fold_ok, valid)
             # Host side: history + termination between blocks only.
             for i, plan in enumerate(plans):
                 s.t = plan.t_next
                 s.events += 1
                 if do_eval[i]:
-                    s.acc = float(accs[i])
-                    s.history.append((s.t / 3600.0, s.events, s.acc))
+                    if fold_ok[i]:
+                        s.acc = float(accs[i])
+                        s.history.append((s.t / 3600.0, s.events, s.acc))
+                    else:
+                        eng.eval_and_record(s)
                     if s.acc >= cfg.target_accuracy:
                         return
+            eng.ckpt_tick(s, {"params": s.params})
             if terminal:
                 s.t = eng.horizon_s + 1.0
                 return
@@ -387,6 +406,31 @@ class CycleStrategy(Strategy):
             self._plan_launch_batch(eng, st, batch)
         return events
 
+    # Checkpoint plan-state codec: the inflight schedule and buffer
+    # bookkeeping round-trip through JSON (repr-exact for float64), in
+    # dict insertion order — arrival ties break on it in plan_events.
+    @staticmethod
+    def _encode_plan_state(st: dict) -> dict:
+        return {
+            "inflight": [[int(l), float(a), [float(x) for x in lam]]
+                         for l, (a, lam) in st["inflight"].items()],
+            "base_tag": [[int(l), int(t)]
+                         for l, t in st["base_tag"].items()],
+            "tag": int(st["tag"]), "fill": int(st["fill"]),
+            "meta": [[int(l), int(bt)] for l, bt in st["meta"]],
+        }
+
+    @staticmethod
+    def _decode_plan_state(d: dict) -> dict:
+        return {
+            "inflight": {int(l): (float(a),
+                                  np.asarray(lam, dtype=np.float64))
+                         for l, a, lam in d["inflight"]},
+            "base_tag": {int(l): int(t) for l, t in d["base_tag"]},
+            "tag": int(d["tag"]), "fill": int(d["fill"]),
+            "meta": [(int(l), int(bt)) for l, bt in d["meta"]],
+        }
+
     def run_fused(self, eng: Any, s: RunState) -> None:
         cfg = eng.cfg
         ex = eng.executor
@@ -394,10 +438,18 @@ class CycleStrategy(Strategy):
         K = max(1, cfg.plan_block)
         B = self.buffer_slots(eng)
         need = cfg.local_steps * eng.trainer.batch_size
-        st = self.init_plan_state(eng, s.t)
         bases = ex.broadcast_rows(s.params, L)
         buf = ex.broadcast_rows(
             jax.tree.map(jnp.zeros_like, s.params), B)
+        st = None
+        loaded = eng.ckpt_resume(
+            s, {"params": s.params, "bases": bases, "buf": buf})
+        if loaded is not None:
+            s.params, bases, buf = (loaded["params"], loaded["bases"],
+                                    loaded["buf"])
+            st = self._decode_plan_state(eng.ckpt_meta())
+        if st is None:
+            st = self.init_plan_state(eng, s.t)
         while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
                and s.acc < cfg.target_accuracy):
             if not st["inflight"]:
@@ -449,6 +501,9 @@ class CycleStrategy(Strategy):
                         s.history.append((s.t / 3600.0, s.events, s.acc))
                         if s.acc >= cfg.target_accuracy:
                             return
+            eng.ckpt_tick(s, {"params": s.params, "bases": bases,
+                              "buf": buf},
+                          meta=self._encode_plan_state(st))
 
 
 class AsyncFoldPlan:

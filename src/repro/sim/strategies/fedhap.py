@@ -15,7 +15,12 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.weights import chain_stats, mu_from_chain, segment_ends
+from repro.core.weights import (
+    chain_stats,
+    mu_from_chain,
+    renormalize,
+    segment_ends,
+)
 from repro.sim.strategies.base import RoundStrategy, register_strategy
 
 
@@ -75,6 +80,20 @@ class FedHap(RoundStrategy):
         lat = train_t + counts * isl + shl
         ends = counts > 0                        # slots that end a segment
         round_end = max(t, float((orbit_t[:, None] + lat)[ends].max()))
+        if eng.fault_plane is not None:
+            # Lost uploads (fault plane): a segment whose terminal
+            # satellite's upload is lost at the report tick contributes
+            # nothing this round — its members' mu zero out and the
+            # Eq. 14-16 weights renormalize over the surviving uploads.
+            # The round barrier still waits for the lost reports (the
+            # loss is discovered at arrival); rounds with no loss keep
+            # the original weights bit-for-bit. An all-lost round
+            # returns an all-zero mu: the drivers fold nothing and
+            # carry params forward.
+            end_ids = np.arange(L)[:, None] * k + seg_end    # (L, k)
+            ok = eng.fault_plane.upload_ok[end_ids, tidx[:, None]]
+            if not ok.all():
+                mu = renormalize(np.where(ok.reshape(-1), mu, 0.0))
         # Inter-HAP ring (down + up) before the next round can start.
         return RoundPlan(orbit_t, mu, round_end,
                          round_end + eng.ring_delay())

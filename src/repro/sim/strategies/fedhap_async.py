@@ -44,8 +44,12 @@ class FedHapAsync(AsyncFoldPlan, CycleStrategy):
         el = eng.elect_sinks(t0, orbits=(l,))
         if not np.isfinite(el.scores[0]):
             return None
-        end = float(eng.station_upload_end(int(el.sinks[0]),
-                                           float(el.delivery[0])))
+        # Lost-upload-aware: under a fault plane the sink retries a
+        # lost upload through the next contact with capped backoff
+        # (engine `upload_end`; delegates to station_upload_end
+        # bit-identically without one).
+        end = float(eng.upload_end(int(el.sinks[0]),
+                                   float(el.delivery[0])))
         if not np.isfinite(end):
             return None
         return end, el.lam[0]
@@ -61,8 +65,7 @@ class FedHapAsync(AsyncFoldPlan, CycleStrategy):
         ok = np.isfinite(el.scores)
         ends = np.full(len(ls), np.inf)
         if ok.any():
-            ends[ok] = eng.station_upload_end(el.sinks[ok],
-                                              el.delivery[ok])
+            ends[ok] = eng.upload_end(el.sinks[ok], el.delivery[ok])
         return [(float(ends[i]), el.lam[i])
                 if ok[i] and np.isfinite(ends[i]) else None
                 for i in range(len(ls))]

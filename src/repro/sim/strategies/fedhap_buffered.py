@@ -72,6 +72,11 @@ class FedHapBuffered(CycleStrategy):
         # itself is a zero-hop candidate: arr[sink] == delivery). The
         # engine stitches the sweep across contact-graph windows, so
         # exits landing past a window boundary still price correctly.
+        # Under a fault plane the exit pricing is lost-upload aware:
+        # route_exit_end(s) price through the engine's `upload_end`
+        # retry wrapper, so a lost exit retries through later contacts
+        # (capped) and ISL terminal faults are already masked out of
+        # the routed graph.
         end = eng.route_exit_end(int(el.sinks[0]), float(el.delivery[0]))
         if not np.isfinite(end):
             return None

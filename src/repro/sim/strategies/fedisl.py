@@ -14,6 +14,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.core.weights import renormalize
 from repro.sim.strategies.base import RoundStrategy, register_strategy
 
 
@@ -58,6 +59,15 @@ class FedIsl(RoundStrategy):
                            + (k // 2) * isl + k * up))
         # FedAvg aggregate of ALL satellites (FedISL is lossless).
         mu = eng.sizes / eng.sizes.sum()
+        if eng.fault_plane is not None:
+            # Lost uploads (fault plane): an orbit whose gateway upload
+            # is lost at the report tick drops out of this round's
+            # FedAvg; survivors renormalize. All lost -> all-zero mu,
+            # the drivers carry params forward. No-loss rounds keep the
+            # original weights bit-for-bit.
+            ok = eng.fault_plane.upload_ok[gw, tidx]        # (L,)
+            if not ok.all():
+                mu = renormalize(np.where(np.repeat(ok, k), mu, 0.0))
         return IslRoundPlan(mu, t + lat, t + lat)
 
 

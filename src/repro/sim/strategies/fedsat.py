@@ -27,12 +27,21 @@ class FedSat(Strategy):
         """Pure-numpy tick plan: visited orbits + the tick's gateway
         time advance (None when nothing is visible)."""
         cfg = eng.cfg
+        k = cfg.sats_per_orbit
         vis = eng.vis_at(t).any(axis=0)
         visited = [l for l in range(cfg.num_orbits)
                    if vis[eng.orbit_slice(l)].any()]
+        if visited and eng.fault_plane is not None:
+            # Lost uploads (fault plane): each visited orbit relays
+            # through its first visible member; when that relay's upload
+            # is lost at this tick the orbit drops out of the tick and
+            # retries at its next pass. No-loss ticks are untouched.
+            relays = np.array([int(np.argmax(vis[eng.orbit_slice(l)]))
+                               + l * k for l in visited])
+            okv = eng.upload_survives(relays, t)
+            visited = [l for l, o in zip(visited, okv) if o]
         if not visited:
             return None
-        k = cfg.sats_per_orbit
         gw_delay = (eng.train_time() + (k // 2) * eng.isl_delay()
                     + k * eng.shl_delay(0, 0, t))
         return visited, max(gw_delay, cfg.time_step_s)
@@ -78,6 +87,9 @@ class FedSat(Strategy):
         k = cfg.sats_per_orbit
         total = eng.sizes.sum()
         bases = ex.broadcast_rows(s.params, cfg.num_orbits)
+        loaded = eng.ckpt_resume(s, {"params": s.params, "bases": bases})
+        if loaded is not None:
+            s.params, bases = loaded["params"], loaded["bases"]
         while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
                and s.acc < cfg.target_accuracy):
             plan = self._plan_tick(eng, s.t)
@@ -97,3 +109,4 @@ class FedSat(Strategy):
             s.events += len(visited)
             s.t += advance
             eng.eval_and_record(s)
+            eng.ckpt_tick(s, {"params": s.params, "bases": bases})

@@ -27,7 +27,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.weights import mu_weights
+from repro.core.weights import mu_weights, renormalize
 from repro.sim.strategies.base import RoundStrategy, register_strategy
 
 
@@ -57,14 +57,26 @@ class FedSink(RoundStrategy):
         el = eng.elect_sinks(t0)
         if not np.isfinite(el.scores).all():
             return None
-        upload_end = eng.station_upload_end(el.sinks, el.delivery)
-        if not np.isfinite(upload_end).all():
+        # Lost-upload-aware exit pricing: under a fault plane a sink's
+        # upload retries through the next contact with capped backoff
+        # (engine `upload_end`; the election itself doesn't foresee
+        # losses — it scores the next-contact exit like the paper's
+        # ideal links, and a sink down in its upload window already
+        # prices its exit through the next up contact via the masked
+        # visibility grid, i.e. re-election is in the scores).
+        upload_end = eng.upload_end(el.sinks, el.delivery)
+        ok = np.isfinite(upload_end)
+        if not ok.all() and (eng.fault_plane is None or not ok.any()):
             return None
         visible = np.zeros((L, k), dtype=bool)
-        visible[np.arange(L), el.sink_slots] = True
+        visible[np.arange(L)[ok], el.sink_slots[ok]] = True
         mu = mu_weights(visible.reshape(-1), eng.sizes, k,
                         cfg.partial_mode, cfg.orbit_weighting)
-        round_end = max(t, float(upload_end.max()))
+        if not ok.all():
+            # Orbits whose sink exhausted its retries drop out of the
+            # round; Eq. 14-16 weights renormalize over the survivors.
+            mu = renormalize(np.asarray(mu))
+        round_end = max(t, float(upload_end[ok].max()))
         # Inter-HAP ring (down + up) before the next round can start.
         return SinkRoundPlan(el.sinks, np.asarray(mu), round_end,
                              round_end + eng.ring_delay())

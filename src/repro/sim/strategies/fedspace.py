@@ -42,6 +42,12 @@ class FedSpace(Strategy):
         newly = vis & ~sc["last_seen"]      # rising edge: a new pass
         sc["last_seen"] = vis
         new_sats = np.nonzero(newly)[0]
+        if eng.fault_plane is not None and len(new_sats):
+            # Lost uploads (fault plane): a pass whose upload is lost
+            # at the rising edge contributes nothing — the pass is
+            # consumed (last_seen already advanced) and the satellite
+            # retries at its next rising edge. No-loss ticks untouched.
+            new_sats = new_sats[eng.upload_survives(new_sats, s.t)]
         if len(new_sats):
             # every fresh pass in this tick trains in ONE vmapped burst
             stacked = eng.trainer.stack(
@@ -82,11 +88,20 @@ class FedSpace(Strategy):
         buffered = 0
         tag = 0
         total = eng.sizes.sum()
+        loaded = eng.ckpt_resume(s, {"params": s.params, "bases": bases})
+        if loaded is not None:
+            s.params, bases = loaded["params"], loaded["bases"]
+            meta = eng.ckpt_meta()
+            base_tag = np.asarray(meta["base_tag"], dtype=int)
+            last_seen = np.asarray(meta["last_seen"], dtype=bool)
+            tag = int(meta["tag"])
         while (s.events < cfg.max_rounds and s.t <= eng.horizon_s
                and s.acc < cfg.target_accuracy):
             vis = eng.vis_at(s.t).any(axis=0)
             new_sats = np.nonzero(vis & ~last_seen)[0]
             last_seen = vis
+            if eng.fault_plane is not None and len(new_sats):
+                new_sats = new_sats[eng.upload_survives(new_sats, s.t)]
             if len(new_sats):
                 idx = eng.sample_indices(new_sats.tolist(), s.t)
                 deltas, bases = ex.fedspace_train(
@@ -114,3 +129,12 @@ class FedSpace(Strategy):
                 s.events += 1
                 eng.eval_and_record(s)
             s.t += cfg.time_step_s
+            if buffered == 0:
+                # Checkpoint only at flush boundaries: the in-flight
+                # buffer holds device-resident delta stacks that the
+                # snapshot template can't carry.
+                eng.ckpt_tick(
+                    s, {"params": s.params, "bases": bases},
+                    meta={"base_tag": base_tag.tolist(),
+                          "last_seen": last_seen.tolist(),
+                          "tag": int(tag)})

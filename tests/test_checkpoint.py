@@ -29,6 +29,30 @@ def test_roundtrip(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_mixed_dtype_bit_exact_roundtrip(tmp_path):
+    """Save->load restores every leaf's dtype AND bytes exactly.
+
+    bfloat16 has no npz representation (stored as a uint16 view) and
+    int16 must not silently promote — bit-exactness here is what makes
+    crash-recovered runs reproduce uninterrupted ones."""
+    rng = np.random.default_rng(3)
+    t = {
+        "bf16": jnp.asarray(rng.normal(size=(7, 5)), dtype=jnp.bfloat16),
+        "f32": jnp.asarray(rng.normal(size=(4,)), dtype=jnp.float32),
+        "i16": jnp.asarray(rng.integers(-500, 500, size=(3, 2)),
+                           dtype=jnp.int16),
+        "scalar": jnp.bfloat16(1.0 / 3.0),
+    }
+    save_checkpoint(tmp_path, t, step=1)
+    like = jax.tree.map(jnp.zeros_like, t)
+    loaded, _ = load_checkpoint(tmp_path, like)
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(t)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        assert a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+
+
 def test_latest_pointer(tmp_path):
     t = _tree()
     save_checkpoint(tmp_path, t, step=1)

@@ -1,0 +1,347 @@
+"""Deterministic fault-injection plane: grammar, outage tables, graph
+degradation, lost-upload retries, re-election determinism, and
+crash-recovery (checkpoint/resume) equivalence.
+
+The plane is resolved eagerly from ``(seed, salt, stream)``-keyed rng
+streams and indexed by grid time, so fused and per-round drivers see
+the same faults regardless of call order — the equivalence tests here
+are the oracle for that property.
+"""
+import numpy as np
+import pytest
+
+from repro.faults import MAX_UPLOAD_RETRIES, FaultPlane, FaultSpec, parse_faults
+from repro.orbits import WalkerConstellation
+from repro.orbits.routing import build_contact_graph, earliest_arrival, elect_sinks
+from repro.sim import RoundEngine, SimConfig
+
+QUICK = dict(model_kind="mlp", num_samples=1500, eval_samples=300,
+             local_steps=2, horizon_h=36.0, time_step_s=120.0,
+             max_rounds=4)
+
+FAULTS = ("sat_outage=0.05,isl_drop=0.1,upload_loss=0.15,"
+          "hap_outage=0.05,mtbf_h=2,mttr_h=1")
+
+SCENARIOS = [
+    ("fedhap", "one_hap"),
+    ("fedisl", "gs"),
+    ("fedisl_ideal", "meo"),
+    ("fedsat", "gs_np"),
+    ("fedspace", "gs"),
+    ("fedsink", "haps:2"),
+    ("fedhap_async", "haps:2"),
+    ("fedhap_buffered", "haps:2"),
+]
+
+
+def _histories_match(ref, fus):
+    assert fus.rounds == ref.rounds
+    assert fus.sim_hours == ref.sim_hours
+    for (t_r, e_r, a_r), (t_f, e_f, a_f) in zip(ref.history, fus.history):
+        assert t_f == t_r and e_f == e_r
+        np.testing.assert_allclose(a_f, a_r, rtol=1e-4, atol=1e-5)
+
+
+class TestParseFaults:
+    def test_empty_is_no_faults(self):
+        assert not parse_faults("").any_faults
+        assert not parse_faults("faults:").any_faults
+
+    def test_full_grammar(self):
+        spec = parse_faults("faults:" + FAULTS)
+        assert spec == FaultSpec(sat_outage=0.05, isl_drop=0.1,
+                                 upload_loss=0.15, hap_outage=0.05,
+                                 mtbf_h=2.0, mttr_h=1.0)
+        assert spec.any_faults
+        # the "faults:" prefix is optional
+        assert parse_faults(FAULTS) == spec
+
+    def test_bad_key_raises(self):
+        with pytest.raises(ValueError, match="bad faults entry"):
+            parse_faults("sat_outage=0.1,gamma_rays=0.5")
+
+    def test_missing_value_raises(self):
+        with pytest.raises(ValueError, match="bad faults entry"):
+            parse_faults("sat_outage")
+
+    def test_rate_out_of_range_raises(self):
+        with pytest.raises(ValueError, match=r"\[0, 1\)"):
+            parse_faults("upload_loss=1.0")
+        with pytest.raises(ValueError, match=r"\[0, 1\)"):
+            parse_faults("sat_outage=-0.1")
+
+    def test_nonpositive_mtbf_raises(self):
+        with pytest.raises(ValueError, match="mtbf_h"):
+            parse_faults("sat_outage=0.1,mtbf_h=0")
+
+
+class TestFaultPlane:
+    GRID = np.arange(0, 36 * 3600.0, 60.0)
+
+    def _plane(self, seed=0, **kw):
+        spec = FaultSpec(**kw)
+        st_is_hap = np.array([True, False, True])
+        return FaultPlane(spec, seed=seed, n_sats=24,
+                          st_is_hap=st_is_hap, grid_t=self.GRID)
+
+    def test_deterministic_per_seed(self):
+        kw = dict(sat_outage=0.1, isl_drop=0.2, upload_loss=0.3,
+                  hap_outage=0.1, mtbf_h=2.0, mttr_h=1.0)
+        a, b = self._plane(seed=7, **kw), self._plane(seed=7, **kw)
+        np.testing.assert_array_equal(a.sat_up, b.sat_up)
+        np.testing.assert_array_equal(a.st_up, b.st_up)
+        np.testing.assert_array_equal(a.isl_fault, b.isl_fault)
+        np.testing.assert_array_equal(a.upload_ok, b.upload_ok)
+        c = self._plane(seed=8, **kw)
+        assert not np.array_equal(a.sat_up, c.sat_up)
+
+    def test_isl_fault_symmetric_hollow(self):
+        p = self._plane(isl_drop=0.3)
+        np.testing.assert_array_equal(p.isl_fault, p.isl_fault.T)
+        assert not p.isl_fault.diagonal().any()
+        assert p.has_isl_faults
+
+    def test_only_hap_stations_fault(self):
+        p = self._plane(hap_outage=0.4, mttr_h=1.0)
+        assert p.st_up[1].all()             # ground station: never down
+        assert not p.st_up[[0, 2]].all()    # HAPs: some downtime
+
+    def test_outage_fraction_tracks_rate(self):
+        p = self._plane(sat_outage=0.2, mtbf_h=1.0)  # mttr derived
+        down = 1.0 - p.sat_up.mean()
+        assert 0.05 < down < 0.45           # renewal process, loose band
+
+    def test_upload_loss_rate(self):
+        p = self._plane(upload_loss=0.25)
+        lost = 1.0 - p.upload_ok.mean()
+        np.testing.assert_allclose(lost, 0.25, atol=0.02)
+
+    def test_entities_start_up(self):
+        p = self._plane(sat_outage=0.3, hap_outage=0.3, mtbf_h=2.0,
+                        mttr_h=1.0)
+        assert p.sat_up[:, 0].all() and p.st_up[:, 0].all()
+
+    def test_no_faults_tables_all_up(self):
+        p = self._plane()
+        assert p.sat_up.all() and p.st_up.all() and p.upload_ok.all()
+        assert not p.has_isl_faults
+        assert p.link_up().all()
+
+    def test_describe_is_json_able(self):
+        import json
+        json.dumps(self._plane(sat_outage=0.1, isl_drop=0.1).describe())
+
+
+class TestFaultMaskGraphs:
+    CONST = WalkerConstellation(num_orbits=3, sats_per_orbit=4)
+    GRID = np.arange(0, 3 * 3600.0, 60.0)
+
+    def test_dead_satellite_unreachable(self):
+        S = len(self.CONST.satellites)
+        mask = np.zeros(S, dtype=bool)
+        mask[5] = True
+        g = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                fault_mask=mask)
+        arr = earliest_arrival(g, np.array([0]), np.array([0.0]))
+        assert not np.isfinite(arr[0, 5])
+
+    def test_dense_csr_agree_under_mask(self):
+        S = len(self.CONST.satellites)
+        rng = np.random.default_rng(2)
+        mask = np.triu(rng.random((S, S)) < 0.2, 1)
+        mask |= mask.T
+        dense = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                    fault_mask=mask)
+        csr = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                  sparse=True, fault_mask=mask)
+        src = np.arange(4)
+        t0 = np.zeros(4)
+        np.testing.assert_array_equal(earliest_arrival(dense, src, t0),
+                                      earliest_arrival(csr, src, t0))
+
+    def test_incremental_reuse_bit_equal_under_mask(self):
+        S = len(self.CONST.satellites)
+        mask = np.zeros(S, dtype=bool)
+        mask[[2, 9]] = True
+        half = len(self.GRID) // 2
+        w0 = build_contact_graph(self.CONST, self.GRID[:half],
+                                 n_params=1000, fault_mask=mask)
+        g_inc = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                    reuse=w0, fault_mask=mask)
+        g_cold = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                     fault_mask=mask)
+        np.testing.assert_array_equal(g_inc.edge_next,
+                                      g_cold.edge_next)
+
+    def test_reuse_with_different_mask_ignored(self):
+        S = len(self.CONST.satellites)
+        m0 = np.zeros(S, dtype=bool)
+        m1 = m0.copy()
+        m1[3] = True
+        half = len(self.GRID) // 2
+        w0 = build_contact_graph(self.CONST, self.GRID[:half],
+                                 n_params=1000, fault_mask=m0)
+        g = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                reuse=w0, fault_mask=m1)
+        cold = build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                   fault_mask=m1)
+        np.testing.assert_array_equal(g.edge_next, cold.edge_next)
+
+    def test_bad_mask_shape_raises(self):
+        with pytest.raises(ValueError, match="fault_mask"):
+            build_contact_graph(self.CONST, self.GRID, n_params=1000,
+                                fault_mask=np.zeros(3, dtype=bool))
+
+
+class TestElectSinksTieBreak:
+    def test_equal_scores_pick_lowest_slot(self):
+        """Two mirror-image candidates score identically; the election
+        must resolve to ring slot 0 (np.argmin first-minimum rule)."""
+        const = WalkerConstellation(num_orbits=1, sats_per_orbit=2)
+        grid = np.arange(0, 600.0, 60.0)
+        pos = np.zeros((2, len(grid), 3))
+        pos[0, :] = [7000e3, 1000e3, 0.0]   # constant, mirrored in y
+        pos[1, :] = [7000e3, -1000e3, 0.0]
+        g = build_contact_graph(const, grid, n_params=1000, positions=pos)
+        members = np.array([[0, 1]])
+        sizes = np.ones((1, 2))
+        el = elect_sinks(g, members, sizes, 0.0,
+                         exit_cost_s=np.zeros((1, 2)))
+        np.testing.assert_allclose(el.all_scores[0, 0],
+                                   el.all_scores[0, 1])
+        assert el.sink_slots[0] == 0 and el.sinks[0] == 0
+
+
+class TestEngineFaultPlane:
+    def test_empty_faults_no_plane(self):
+        eng = RoundEngine(SimConfig(strategy="fedhap", stations="one_hap",
+                                    faults="", **QUICK))
+        assert eng.fault_plane is None
+
+    def test_upload_end_delegates_without_losses(self):
+        """No upload_loss => upload_end is bitwise station_upload_end,
+        even when other fault axes are active."""
+        eng = RoundEngine(SimConfig(strategy="fedhap", stations="one_hap",
+                                    faults="sat_outage=0.1", **QUICK))
+        sats = np.arange(eng.n_sats)
+        for t in (0.0, 3600.0, 7200.0):
+            np.testing.assert_array_equal(
+                eng.upload_end(sats, t), eng.station_upload_end(sats, t))
+
+    def test_upload_end_retry_is_monotone(self):
+        eng = RoundEngine(SimConfig(strategy="fedhap", stations="one_hap",
+                                    faults="upload_loss=0.4", **QUICK))
+        sats = np.arange(eng.n_sats)
+        base = eng.station_upload_end(sats, 0.0)
+        ends = eng.upload_end(sats, 0.0)
+        ok = np.isfinite(ends) & np.isfinite(base)
+        assert (ends[ok] >= base[ok]).all()
+        lost = ~eng.upload_survives(sats, base - 1e-6)
+        assert (ends[ok & lost] > base[ok & lost]).all()
+
+    def test_upload_end_all_lost_is_inf(self):
+        eng = RoundEngine(SimConfig(strategy="fedhap", stations="one_hap",
+                                    faults="upload_loss=0.4", **QUICK))
+        eng.fault_plane.upload_ok[:] = False
+        assert not np.isfinite(
+            eng.upload_end(np.arange(eng.n_sats), 0.0)).any()
+        assert MAX_UPLOAD_RETRIES >= 1
+
+    def test_outages_mask_visibility(self):
+        clean = RoundEngine(SimConfig(strategy="fedhap",
+                                      stations="one_hap", **QUICK))
+        faulty = RoundEngine(SimConfig(
+            strategy="fedhap", stations="one_hap",
+            faults="sat_outage=0.2,hap_outage=0.2,mtbf_h=1,mttr_h=1",
+            **QUICK))
+        up = faulty.fault_plane.link_up()
+        np.testing.assert_array_equal(faulty.vis, clean.vis & up)
+        assert faulty.vis.sum() < clean.vis.sum()
+
+
+class TestFusedVsPerRoundUnderFaults:
+    @pytest.mark.parametrize("strategy,stations", SCENARIOS)
+    def test_histories_match(self, strategy, stations):
+        cfg = dict(strategy=strategy, stations=stations, faults=FAULTS,
+                   **QUICK)
+        ref = RoundEngine(SimConfig(**cfg)).run(fused=False)
+        fus = RoundEngine(SimConfig(**cfg)).run(fused=True)
+        _histories_match(ref, fus)
+        assert np.isfinite([a for _, _, a in fus.history]).all()
+
+    def test_empty_faults_bit_identical(self):
+        cfg = dict(strategy="fedhap", stations="one_hap", **QUICK)
+        base = RoundEngine(SimConfig(**cfg)).run(fused=True)
+        empt = RoundEngine(SimConfig(**cfg, faults="")).run(fused=True)
+        assert empt.history == base.history
+
+
+class TestAllLostRound:
+    """A round that loses 100% of its uploads folds nothing and carries
+    params forward — finite history, never NaN (the renormalize
+    zero-total guard end to end)."""
+
+    def _engine(self):
+        eng = RoundEngine(SimConfig(strategy="fedhap", stations="one_hap",
+                                    faults="upload_loss=0.3", **QUICK))
+        eng.fault_plane.upload_ok[:] = False
+        return eng
+
+    @pytest.mark.parametrize("fused", [False, True], ids=["ref", "fused"])
+    def test_history_finite(self, fused):
+        res = self._engine().run(fused=fused)
+        assert res.rounds == QUICK["max_rounds"]
+        accs = [a for _, _, a in res.history]
+        assert np.isfinite(accs).all()
+        # nothing ever folds: accuracy is frozen at the init model's
+        assert len(set(accs)) == 1
+
+    def test_fused_matches_reference(self):
+        _histories_match(self._engine().run(fused=False),
+                         self._engine().run(fused=True))
+
+
+class TestCheckpointResume:
+    """A run interrupted at round 2 and resumed reproduces the
+    uninterrupted history bit-exactly (counters, rng stream, and plane
+    state all restored; time-indexed planes replan identically)."""
+
+    @pytest.mark.parametrize("strategy,stations", SCENARIOS)
+    def test_resume_bit_identical_fused(self, strategy, stations,
+                                        tmp_path):
+        cfg = dict(strategy=strategy, stations=stations, faults=FAULTS,
+                   **QUICK)
+        full = RoundEngine(SimConfig(**cfg)).run(fused=True)
+        half = dict(cfg, max_rounds=2)
+        RoundEngine(SimConfig(**half)).run(
+            fused=True, checkpoint_dir=tmp_path, checkpoint_every=1)
+        res = RoundEngine(SimConfig(**cfg)).run(
+            fused=True, checkpoint_dir=tmp_path, resume=True,
+            checkpoint_every=1)
+        assert res.history == full.history
+        assert res.sim_hours == full.sim_hours
+
+    def test_resume_bit_identical_per_round(self, tmp_path):
+        cfg = dict(strategy="fedhap", stations="one_hap", faults=FAULTS,
+                   **QUICK)
+        full = RoundEngine(SimConfig(**cfg)).run(fused=False)
+        half = dict(cfg, max_rounds=2)
+        RoundEngine(SimConfig(**half)).run(
+            fused=False, checkpoint_dir=tmp_path, checkpoint_every=1)
+        res = RoundEngine(SimConfig(**cfg)).run(
+            fused=False, checkpoint_dir=tmp_path, resume=True,
+            checkpoint_every=1)
+        assert res.history == full.history
+
+    def test_resume_without_snapshot_is_fresh_start(self, tmp_path):
+        cfg = dict(strategy="fedhap", stations="one_hap", **QUICK)
+        plain = RoundEngine(SimConfig(**cfg)).run(fused=True)
+        res = RoundEngine(SimConfig(**cfg)).run(
+            fused=True, checkpoint_dir=tmp_path / "empty", resume=True)
+        assert res.history == plain.history
+
+    def test_per_round_event_strategy_rejected(self, tmp_path):
+        eng = RoundEngine(SimConfig(strategy="fedhap_async",
+                                    stations="haps:2", **QUICK))
+        with pytest.raises(ValueError, match="round-barrier"):
+            eng.run(fused=False, checkpoint_dir=tmp_path)

@@ -16,6 +16,7 @@ from repro.core.weights import (
     chain_weights,
     mu_from_chain,
     mu_weights,
+    renormalize,
     segment_ends,
 )
 from repro.orbits import next_contact_table
@@ -137,6 +138,43 @@ class TestChainStats:
                 mu = mu_weights(vis, sizes, 6, pm, ow, xp=np)
                 np.testing.assert_allclose(mu.sum(), 1.0, rtol=1e-9,
                                            err_msg=f"{pm}/{ow}")
+
+
+class TestZeroTotalGuards:
+    def test_chain_weights_zero_total(self):
+        # paper mode: the origin's gamma is defined as 1, so a zero-mass
+        # chain degenerates to "origin keeps everything" — finite.
+        w = chain_weights(np.zeros(4), 0.0, "paper")
+        assert np.isfinite(w).all()
+        np.testing.assert_allclose(w, [1.0, 0.0, 0.0, 0.0])
+        # exact mode: zero total mass yields all-zero, never NaN.
+        w = chain_weights(np.zeros(4), 0.0, "exact")
+        assert np.isfinite(w).all() and (w == 0).all()
+
+    def test_chain_stats_zero_mass_ring(self):
+        vis = np.array([[True, False, True]])
+        lam, seg = chain_stats(vis, np.zeros((1, 3)), "paper")
+        assert np.isfinite(lam).all() and np.isfinite(seg).all()
+
+    def test_mu_from_chain_zero_total_mass(self):
+        vis = np.ones((2, 3), bool)
+        sizes = np.zeros((2, 3))
+        lam, seg = chain_stats(vis, sizes, "paper")
+        mu = mu_from_chain(lam, seg, sizes, "global")
+        assert np.isfinite(np.asarray(mu)).all()
+
+    def test_renormalize_survivors(self):
+        w = renormalize(np.array([0.0, 0.2, 0.3, 0.0]))
+        np.testing.assert_allclose(w, [0.0, 0.4, 0.6, 0.0])
+        np.testing.assert_allclose(w.sum(), 1.0)
+
+    def test_renormalize_all_zero_stays_zero(self):
+        w = renormalize(np.zeros(5))
+        assert np.isfinite(w).all() and (w == 0).all()
+
+    def test_renormalize_no_loss_identity_scale(self):
+        w0 = np.array([0.25, 0.25, 0.5])
+        np.testing.assert_allclose(renormalize(w0), w0, rtol=1e-15)
 
 
 class TestNextContactTable:
