@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import chain_weights
-from repro.kernels import ops
 
 
 def run() -> list[tuple[int, float, float, float]]:
@@ -42,15 +41,15 @@ def run() -> list[tuple[int, float, float, float]]:
             return jnp.einsum("s,sp->p", lam, x)
 
         for f in (chain, fused):
-            jax.block_until_ready(f(stacked))
-        t0 = time.time()
+            jax.block_until_ready(f(stacked))  # fedlint: disable=FHL004 — warmup sync before timing
+        t0 = time.perf_counter()
         for _ in range(10):
-            jax.block_until_ready(chain(stacked))
-        t_chain = (time.time() - t0) / 10 * 1e6
-        t0 = time.time()
+            jax.block_until_ready(chain(stacked))  # fedlint: disable=FHL004 — microbench measures per-call latency by design
+        t_chain = (time.perf_counter() - t0) / 10 * 1e6
+        t0 = time.perf_counter()
         for _ in range(10):
-            jax.block_until_ready(fused(stacked))
-        t_fused = (time.time() - t0) / 10 * 1e6
+            jax.block_until_ready(fused(stacked))  # fedlint: disable=FHL004 — microbench measures per-call latency by design
+        t_fused = (time.perf_counter() - t0) / 10 * 1e6
         rows.append((p, t_chain, t_fused, t_chain / t_fused))
     return rows
 

@@ -9,17 +9,16 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 
 
 def _time(f, *args, iters=5):
     f(*args)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
-        jax.block_until_ready(f(*args))
-    return (time.time() - t0) / iters * 1e6
+        jax.block_until_ready(f(*args))  # fedlint: disable=FHL004 — microbench measures per-call latency by design
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def run() -> list[tuple[str, float, float]]:

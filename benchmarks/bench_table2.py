@@ -32,7 +32,7 @@ def run(quick: bool = True, target: float = 0.80,
                 base, model_kind="cnn", num_samples=70000,
                 eval_samples=6000, local_steps=54, max_rounds=120,
                 horizon_h=72.0, iid=False)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = SatcomSimulator(cfg).run()
         tta = res.time_to_accuracy(target)
         rows.append({
@@ -42,7 +42,7 @@ def run(quick: bool = True, target: float = 0.80,
                 round(tta, 2) if tta else None,
             "rounds": res.rounds,
             "sim_hours": round(res.sim_hours, 2),
-            "wall_s": round(time.time() - t0, 1),
+            "wall_s": round(time.perf_counter() - t0, 1),
             "history": [(round(t, 2), round(a, 4))
                         for t, _, a in res.history],
         })

@@ -7,7 +7,6 @@ benches. Prints ``name,us_per_call,derived`` style CSV blocks.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -23,7 +22,7 @@ def main() -> None:
     def want(name):
         return only is None or name in only
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if want("kernels"):
         print("== bench_kernels (name,us_per_call,max_err) ==", flush=True)
         from benchmarks import bench_kernels
@@ -60,7 +59,7 @@ def main() -> None:
         for name, r in res.items():
             print(f"{name},{r['final_acc']}")
 
-    print(f"== benchmarks done in {time.time()-t0:.1f}s ==")
+    print(f"== benchmarks done in {time.perf_counter()-t0:.1f}s ==")
 
 
 if __name__ == "__main__":

@@ -109,7 +109,7 @@ def run_wallclock(cfg: SimConfig, rounds: int = 25,
             plan = strat.plan_round(eng, t)
             if plan is None:
                 break
-            jax.block_until_ready(eng.combine(stacked, plan.mu))
+            jax.block_until_ready(eng.combine(stacked, plan.mu))  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             t = plan.round_end + ring
             n += 1
         return n
@@ -120,7 +120,7 @@ def run_wallclock(cfg: SimConfig, rounds: int = 25,
             out = _legacy_round(eng, stacked, t)
             if out is None:
                 break
-            jax.block_until_ready(out[0])
+            jax.block_until_ready(out[0])  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             t = out[1] + ring
             n += 1
         return n
@@ -174,7 +174,7 @@ def run_wallclock_async(cfg: SimConfig, rounds: int = 100,
             rho = float(eng.sizes[eng.orbit_slice(l)].sum() / total)
             glob = tree_add(tree_scale(glob, 1.0 - rho),
                             tree_scale(eng.combine(stacked_k, lam), rho))
-            jax.block_until_ready(glob)
+            jax.block_until_ready(glob)  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             n += 1
             nxt = strat.schedule_cycle(eng, l, t)
             if nxt is not None and nxt[0] <= eng.horizon_s:
@@ -220,7 +220,7 @@ def run_wallclock_fused(cfg: SimConfig, rounds: int = 100,
             plan = strat.plan_round(eng, t)
             if plan is None:
                 break
-            jax.block_until_ready(eng.combine(stacked, plan.mu))
+            jax.block_until_ready(eng.combine(stacked, plan.mu))  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             t = plan.t_next
             n += 1
         return n
@@ -237,7 +237,7 @@ def run_wallclock_fused(cfg: SimConfig, rounds: int = 100,
                 t = plan.t_next
             if not mus:
                 break
-            jax.block_until_ready(ex.fold_block(stacked, np.asarray(mus)))
+            jax.block_until_ready(ex.fold_block(stacked, np.asarray(mus)))  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             n += len(mus)
         return n
 
@@ -297,7 +297,7 @@ def run_wallclock_cycles(cfg: SimConfig, rounds: int = 100,
                 g = tree_add(tree_scale(g, float(e["keep"])),
                              eng.combine(eng.trainer.stack(buf), rhos))
                 buf.clear()
-            jax.block_until_ready((g, buf))
+            jax.block_until_ready((g, buf))  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             n += 1
         return n
 
@@ -321,7 +321,7 @@ def run_wallclock_cycles(cfg: SimConfig, rounds: int = 100,
                 "valid": np.ones(m, dtype=bool),
             }
             g, buf = ex.cycle_fold_block(g, buf, stacked_k, tensors)
-            jax.block_until_ready(g)
+            jax.block_until_ready(g)  # fedlint: disable=FHL004 — wallclock bench paces the event loop on real results
             n += m
         return n
 

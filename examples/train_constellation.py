@@ -77,7 +77,7 @@ def main() -> None:
     rng = np.random.default_rng(0)
     step_fn = jax.jit(_single_device_round(model, fed_cfg))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for rnd in range(args.rounds):
         batch = make_batches(cfg, args.sats, args.batch_per_sat, args.seq,
@@ -87,7 +87,7 @@ def main() -> None:
         losses.append(float(metrics["local_loss"]))
         if rnd % 5 == 0 or rnd == args.rounds - 1:
             tok_s = (args.sats * args.batch_per_sat * args.seq * (rnd + 1)
-                     / (time.time() - t0))
+                     / (time.perf_counter() - t0))
             print(f"  round {rnd:4d}  loss {losses[-1]:.4f}  "
                   f"({tok_s:,.0f} tok/s)", flush=True)
     assert losses[-1] < losses[0], "federated training must reduce loss"

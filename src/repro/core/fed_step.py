@@ -10,15 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.mesh_round import FedRoundConfig, build_round
 from repro.models.transformer import Transformer, cross_entropy_loss
-from repro.optim import Optimizer, apply_updates, sgd
 
 
 @dataclasses.dataclass(frozen=True)

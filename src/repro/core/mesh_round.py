@@ -256,7 +256,7 @@ def _specs_for(tree, cmap: ConstellationMeshMap, multi_pod: bool,
                model_specs=None):
     """Leading satellite dim shards over pod+data; trailing dims over
     `model` per the provided per-leaf specs (or replicated)."""
-    from repro.models.params import ParamDef, is_def
+    from repro.models.params import is_def
     lead = ("pod", "data") if multi_pod else ("data",)
     if model_specs is None:
         return jax.tree.map(

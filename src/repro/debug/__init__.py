@@ -1,0 +1,16 @@
+"""Runtime debugging/sanitizing utilities (see :mod:`repro.debug.sanitize`)."""
+from repro.debug.sanitize import (
+    RetraceDetector,
+    RetraceError,
+    compile_counts,
+    sanitized,
+    sanitized_run,
+)
+
+__all__ = [
+    "RetraceDetector",
+    "RetraceError",
+    "compile_counts",
+    "sanitized",
+    "sanitized_run",
+]

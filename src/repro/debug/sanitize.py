@@ -1,0 +1,130 @@
+"""Runtime sanitizer harness for the fused plan/execute simulator.
+
+The static pass (:mod:`tools.fedlint`) rejects invariant-breaking
+*code*; this module catches the dynamic escapes it can't see:
+
+* :func:`sanitized` — a context that runs the fused block loop under
+  ``jax.transfer_guard("disallow")`` (every host<->device crossing must
+  be an explicit ``jnp.asarray`` / ``np.asarray`` / ``device_put``;
+  implicit transfers — a raw numpy arg hitting a jitted program, a
+  ``float(device_scalar)`` inside the hot loop — raise instead of
+  silently syncing), strict ``jax.numpy_dtype_promotion`` (no implicit
+  f32/f64 or int/float mixing; the FHL005 invariant, enforced at
+  trace time), and ``jax.numpy_rank_promotion="raise"`` (no silent
+  broadcasting across mismatched ranks).
+
+* :class:`RetraceDetector` — asserts a compile-count budget per
+  ``(kind, block-shape)`` entry of :attr:`FusedExecutor._jit`. The
+  executor's whole performance model is "one XLA program per block
+  shape, reused for the life of the run"; a weak-type or dtype wobble
+  that retraces per block silently turns the O(1)-compiles design into
+  O(rounds) and shows up only as wall-clock noise. Each cache entry is
+  a ``jax.jit`` wrapper whose ``_cache_size()`` reports how many times
+  it actually traced.
+
+* :func:`sanitized_run` — the one-call harness used by
+  ``tests/test_sanitize.py``: build an engine, run the fused driver
+  inside :func:`sanitized`, and fail on any retrace over budget.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator, Optional
+
+import jax
+
+
+@contextlib.contextmanager
+def sanitized(*, transfer: Optional[str] = "disallow",
+              dtype_promotion: Optional[str] = "strict",
+              rank_promotion: Optional[str] = "raise") -> Iterator[None]:
+    """Run the enclosed block under jax's strictness guards.
+
+    Pass ``None`` for any knob to leave the ambient setting untouched
+    (e.g. ``sanitized(dtype_promotion=None)`` when exercising code that
+    legitimately mixes integer index dtypes).
+    """
+    with contextlib.ExitStack() as stack:
+        if transfer is not None:
+            stack.enter_context(jax.transfer_guard(transfer))
+        if dtype_promotion is not None:
+            stack.enter_context(
+                jax.numpy_dtype_promotion(dtype_promotion))
+        if rank_promotion is not None:
+            stack.enter_context(jax.numpy_rank_promotion(rank_promotion))
+        yield
+
+
+def compile_counts(executor: Any) -> dict:
+    """``{cache key: number of traced programs}`` for every jitted
+    entry the executor has built so far. Keys are the executor's own
+    ``(kind, *shape)`` tuples, e.g. ``("round", K, S, n_steps)``."""
+    out = {}
+    for key, fn in getattr(executor, "_jit", {}).items():
+        size = getattr(fn, "_cache_size", None)
+        out[key] = int(size()) if callable(size) else -1
+    return out
+
+
+class RetraceError(AssertionError):
+    """A jitted block program traced more often than its budget."""
+
+
+class RetraceDetector:
+    """Snapshot an executor's compile counts, then :meth:`check` that
+    no ``(kind, block-shape)`` entry traced more than ``budget`` times
+    since. Budget is per entry: distinct block shapes rightly get
+    distinct programs; the pathology is one shape tracing twice."""
+
+    def __init__(self, executor: Any, budget: int = 1):
+        self.executor = executor
+        self.budget = budget
+        self._baseline = compile_counts(executor)
+
+    def check(self) -> dict:
+        """Return current counts; raise :class:`RetraceError` listing
+        every entry over budget."""
+        counts = compile_counts(self.executor)
+        over = []
+        for key, n in counts.items():
+            traced = n - self._baseline.get(key, 0)
+            if n < 0:
+                over.append(f"{key}: compile count unavailable")
+            elif traced > self.budget:
+                over.append(f"{key}: traced {traced}x "
+                            f"(budget {self.budget})")
+        if over:
+            raise RetraceError(
+                "retrace budget exceeded — a block program is being "
+                "re-traced instead of reused:\n  " + "\n  ".join(over))
+        return counts
+
+
+def sanitized_run(cfg: Any, *, budget: int = 1,
+                  transfer: Optional[str] = "disallow",
+                  dtype_promotion: Optional[str] = "strict",
+                  rank_promotion: Optional[str] = "raise"):
+    """Build a :class:`~repro.sim.engine.RoundEngine` from ``cfg`` (a
+    ``SimConfig`` or kwargs dict), run the fused driver under
+    :func:`sanitized`, and enforce the retrace budget.
+
+    Returns ``(result, compile_counts)``.
+    """
+    from repro.sim import RoundEngine, SimConfig
+    if not isinstance(cfg, SimConfig):
+        cfg = SimConfig(**cfg)
+    eng = RoundEngine(cfg)
+    detector = RetraceDetector(eng.executor, budget=budget)
+    # Guard the fused block loop only: params init and dataset staging
+    # legitimately lift host scalars onto the device, which the
+    # transfer guard rejects; the invariant is about the hot loop.
+    eng._fused_cm = lambda: sanitized(
+        transfer=transfer, dtype_promotion=dtype_promotion,
+        rank_promotion=rank_promotion)
+    result = eng.run(fused=True)
+    counts = detector.check()
+    return result, counts
+
+
+__all__ = ["RetraceDetector", "RetraceError", "compile_counts",
+           "sanitized", "sanitized_run"]

@@ -11,7 +11,6 @@ tile into VMEM, reduces over S on the VPU, writes (BLOCK_P,) out.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -117,7 +117,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     shape = SHAPES[shape_name]
     model = Transformer(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with set_mesh(mesh):
         if shape.mode == "train":
@@ -159,9 +159,9 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(params_spec, specs["cache"],
                                    specs["token"])
 
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = _memory_dict(compiled)
     cost_raw = compiled.cost_analysis() or {}

@@ -27,7 +27,6 @@ are per-partition (per-device) under SPMD.
 """
 import argparse
 import dataclasses
-import functools
 import json
 import pathlib
 

@@ -51,7 +51,7 @@ def main() -> None:
     step = jax.jit(
         lambda p, c, t: model.decode_step(p, c, t, use_window=args.window))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     # prefill by stepping the prompt (cache-correct for all families)
     tok = jnp.asarray(prompts[:, 0])
     generated = [np.asarray(prompts[:, 0])]
@@ -62,7 +62,7 @@ def main() -> None:
         else:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         generated.append(np.asarray(tok))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     out = np.stack(generated, axis=1)
     print(f"[serve] {cfg.name}: {args.batch} seqs x {max_len} steps in "
           f"{dt:.2f}s ({args.batch * max_len / dt:.1f} tok/s)")

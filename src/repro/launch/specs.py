@@ -12,15 +12,13 @@ Shape semantics (assignment):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.dissemination import ConstellationMeshMap
 from repro.core.fed_step import FedTrainConfig, build_fed_train_step
 from repro.core.mesh_round import FedRoundConfig

@@ -110,7 +110,7 @@ def main() -> None:
 
     print(f"[train] {cfg.name}: {model.count_params()/1e6:.1f}M params, "
           f"{n_sats} satellites, {args.round_kind}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     with set_mesh(mesh):
         for rnd in range(args.rounds):
             batch = make_batches(cfg, n_sats, args.batch_per_sat, args.seq,
@@ -121,7 +121,7 @@ def main() -> None:
             loss = float(metrics["local_loss"])
             print(f"  round {rnd:4d}  loss {loss:.4f}  "
                   f"gate {float(metrics['gate']):.0f}  "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+                  f"({time.perf_counter()-t0:.1f}s)", flush=True)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir,
                         jax.tree.map(lambda x: x[0], params_S),

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.layers import apply_rope, rms_norm_headwise
+from repro.models.layers import apply_rope, bcast_trailing, rms_norm_headwise
 from repro.models.params import ParamDef
 
 NEG_INF = -1e30
@@ -245,7 +245,8 @@ def mla_defs(cfg: ArchConfig) -> dict:
 def _rms(x, scale, eps=1e-6):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+    scale_b = bcast_trailing(jnp.asarray(scale), xf.ndim)
+    return (xf * jax.lax.rsqrt(var + eps) * scale_b).astype(x.dtype)
 
 
 def _mla_q(cfg, p, x):

@@ -43,18 +43,18 @@ class CNN:
         x = jax.lax.conv_general_dilated(
             x, p["conv1_w"], (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        x = jax.nn.relu(x + p["conv1_b"])
+        x = jax.nn.relu(x + p["conv1_b"][None, None, None])
         x = jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         x = jax.lax.conv_general_dilated(
             x, p["conv2_w"], (1, 1), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        x = jax.nn.relu(x + p["conv2_b"])
+        x = jax.nn.relu(x + p["conv2_b"][None, None, None])
         x = jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         x = x.reshape(x.shape[0], -1)
-        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
-        return x @ p["fc2_w"] + p["fc2_b"]
+        x = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"][None])
+        return x @ p["fc2_w"] + p["fc2_b"][None]
 
     def loss(self, p: dict, images: jax.Array, labels: jax.Array):
         logits = self.forward(p, images)

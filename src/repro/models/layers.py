@@ -7,6 +7,14 @@ import jax.numpy as jnp
 from repro.models.params import ParamDef
 
 
+def bcast_trailing(v: jax.Array, ndim: int) -> jax.Array:
+    """Reshape a trailing-dim parameter (e.g. ``(d,)`` norm scale) to
+    rank ``ndim`` explicitly. The test suite (and the sanitizer) run
+    with ``jax_numpy_rank_promotion="raise"``, so every cross-rank
+    broadcast must be spelled out; see docs/INVARIANTS.md."""
+    return v.reshape((1,) * (ndim - v.ndim) + v.shape)
+
+
 # ---------------------------------------------------------------- norms
 def norm_def(d: int, kind: str) -> dict:
     if kind == "rmsnorm":
@@ -23,12 +31,14 @@ def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = xf * jax.lax.rsqrt(var + eps) * bcast_trailing(
+            p["scale"].astype(jnp.float32), xf.ndim)
     else:
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
         out = (xf - mu) * jax.lax.rsqrt(var + eps)
-        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        out = (out * bcast_trailing(p["scale"].astype(jnp.float32), out.ndim)
+               + bcast_trailing(p["bias"].astype(jnp.float32), out.ndim))
     return out.astype(x.dtype)
 
 
@@ -36,9 +46,8 @@ def rms_norm_headwise(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
     """qk-norm: RMS-normalize the last (head) dim (Qwen3-style)."""
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
-        x.dtype
-    )
+    scale_b = bcast_trailing(scale.astype(jnp.float32), xf.ndim)
+    return (xf * jax.lax.rsqrt(var + eps) * scale_b).astype(x.dtype)
 
 
 # ---------------------------------------------------------------- rope
@@ -52,10 +61,13 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: (..., seq, heads, head_dim); positions: (..., seq)."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)                       # (d/2,)
-    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,d/2)
+    angles = positions[..., :, None].astype(jnp.float32) \
+        * bcast_trailing(freqs, positions.ndim + 1)       # (..., S, d/2)
     cos = jnp.cos(angles)[..., :, None, :]             # (..., S, 1, d/2)
     sin = jnp.sin(angles)[..., :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = bcast_trailing(cos, x1.ndim)      # pad batch dims positions lack
+    sin = bcast_trailing(sin, x1.ndim)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
 

@@ -31,8 +31,8 @@ class MLP:
         x = images.reshape(images.shape[0], -1)
         n = len(self.cfg.hidden)
         for i in range(n):
-            x = jax.nn.relu(x @ p[f"w{i}"] + p[f"b{i}"])
-        return x @ p[f"w{n}"] + p[f"b{n}"]
+            x = jax.nn.relu(x @ p[f"w{i}"] + p[f"b{i}"][None])
+        return x @ p[f"w{n}"] + p[f"b{n}"][None]
 
     def loss(self, p: dict, images: jax.Array, labels: jax.Array):
         logits = self.forward(p, images)

@@ -51,7 +51,7 @@ def rwkv_defs(cfg: ArchConfig) -> dict:
 def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
     """Dynamic token-shift: five mixed streams. -> (5, B, S, d)."""
     lxx = x_prev - x
-    xxx = x + lxx * p["mu"][3]  # use the w-stream mu as the probe (RWKV6)
+    xxx = x + lxx * p["mu"][3][None, None]  # w-stream mu as probe (RWKV6)
     probe = jnp.tanh(xxx @ p["mix_w1"])            # (B,S,5*rank)
     b, s, _ = x.shape
     probe = probe.reshape(b, s, _STREAMS, -1)
@@ -61,7 +61,8 @@ def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
 
 def _decay(p: dict, xw: jax.Array) -> jax.Array:
     """w_t in (0,1): exp(-exp(base + lora(xw))). xw: (B,S,d)."""
-    wx = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    wx = p["decay_base"][None, None] \
+        + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
     return jnp.exp(-jnp.exp(wx.astype(jnp.float32)))
 
 
@@ -72,7 +73,8 @@ def _group_norm(x: jax.Array, scale, bias, heads: int, eps=1e-5):
     mu = xg.mean(-1, keepdims=True)
     var = xg.var(-1, keepdims=True)
     xg = (xg - mu) * jax.lax.rsqrt(var + eps)
-    return (xg.reshape(b, s, d) * scale + bias).astype(x.dtype)
+    return (xg.reshape(b, s, d) * scale[None, None]
+            + bias[None, None]).astype(x.dtype)
 
 
 def _wkv_chunk(s0, r_c, k_c, v_c, w_c, u):
@@ -177,8 +179,8 @@ def rwkv_channel_mix(cfg: ArchConfig, p: dict, x: jax.Array,
     x_prev = jnp.concatenate(
         [jnp.zeros_like(x[:, :1]) if x_prev_last is None
          else x_prev_last[:, None], x[:, :-1]], axis=1)
-    xk = x + (x_prev - x) * p["mu_k"]
-    xr = x + (x_prev - x) * p["mu_r"]
+    xk = x + (x_prev - x) * p["mu_k"][None, None]
+    xr = x + (x_prev - x) * p["mu_r"][None, None]
     k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
     return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
 
@@ -236,7 +238,7 @@ def rwkv_decode(cfg: ArchConfig, p_tm: dict, p_cm: dict, x_t: jax.Array,
 def rwkv_channel_mix_decode(cfg: ArchConfig, p: dict, x_t: jax.Array,
                             x_prev: jax.Array) -> jax.Array:
     x = x_t[:, 0]
-    xk = x + (x_prev - x) * p["mu_k"]
-    xr = x + (x_prev - x) * p["mu_r"]
+    xk = x + (x_prev - x) * p["mu_k"][None]
+    xr = x + (x_prev - x) * p["mu_r"][None]
     k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
     return (jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]))[:, None]

@@ -41,8 +41,8 @@ def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     # sum_j w[j] * x[t - (K-1) + j]
     out = jnp.zeros_like(x)
     for j in range(k):
-        out = out + pad[:, j : j + x.shape[1], :] * w[j]
-    return out + b
+        out = out + pad[:, j : j + x.shape[1], :] * w[j][None, None]
+    return out + b[None, None]
 
 
 def _ssm_scan_chunked(abar, bx, c_t, h0, chunk: int, unroll: bool = False):
@@ -101,13 +101,14 @@ def mamba_forward(cfg: ArchConfig, p: dict, x: jax.Array,
     dbc = x_c @ p["x_proj"]
     dt_raw, b_t, c_t = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + m.d_state],
                                  axis=-1)
-    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    dt = jax.nn.softplus(
+        dt_raw @ p["dt_proj"] + p["dt_bias"][None, None])       # (B,S,di)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,N)
-    abar = jnp.exp(dt[..., None] * a)                            # (B,S,di,N)
+    abar = jnp.exp(dt[..., None] * a[None, None])                # (B,S,di,N)
     bx = (dt * x_c)[..., None] * b_t[:, :, None, :]              # (B,S,di,N)
     h0 = jnp.zeros((b, di, m.d_state), abar.dtype)
     y, _ = _ssm_scan_chunked(abar, bx, c_t, h0, m.chunk, unroll_chunks)
-    y = y + p["d_skip"] * x_c
+    y = y + p["d_skip"][None, None] * x_c
     return (y * jax.nn.silu(z)) @ p["out_proj"]
 
 
@@ -134,17 +135,17 @@ def mamba_decode(cfg: ArchConfig, p: dict, x_t: jax.Array, cache: dict
     x_in, z = jnp.split(xz, 2, axis=-1)                    # (B, di)
     conv = jnp.concatenate([cache["conv"][:, 1:], x_in[:, None]], axis=1)
     x_c = jax.nn.silu(
-        jnp.einsum("bkd,kd->bd", conv, p["conv_w"]) + p["conv_b"]
+        jnp.einsum("bkd,kd->bd", conv, p["conv_w"]) + p["conv_b"][None]
     )
     dbc = x_c @ p["x_proj"]
     dt_raw, b_t, c_t = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + m.d_state],
                                  axis=-1)
-    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B, di)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"][None])  # (B, di)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
-    abar = jnp.exp(dt[..., None] * a)                       # (B, di, N)
+    abar = jnp.exp(dt[..., None] * a[None])                 # (B, di, N)
     h = abar * cache["h"] + ((dt * x_c)[..., None]
                              * b_t[:, None, :]).astype(jnp.float32)
     y = jnp.einsum("bdn,bn->bd", h.astype(x_t.dtype), c_t)
-    y = y + p["d_skip"] * x_c
+    y = y + p["d_skip"][None] * x_c
     out = (y * jax.nn.silu(z)) @ p["out_proj"]
     return out[:, None], {"h": h, "conv": conv}

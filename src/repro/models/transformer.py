@@ -11,8 +11,6 @@ scan dim.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

@@ -476,6 +476,12 @@ class RoundEngine:
         self._executor = None
         # Checkpoint driver, live only inside a `run(checkpoint_dir=)`.
         self._ckpt: Optional[_CkptState] = None
+        # Optional context-manager factory wrapped around the fused
+        # block loop only (params init / dataset staging stay outside).
+        # Installed by repro.debug.sanitize to run the loop under
+        # jax.transfer_guard + strict promotion; this module stays
+        # jax-free by taking it as an opaque callable.
+        self._fused_cm: Optional[Any] = None
 
     # ------------------------------------------------------------ helpers
     @property
@@ -1182,7 +1188,11 @@ class RoundEngine:
         s = RunState(params=self.trainer.init(cfg.seed))
         try:
             if use_fused:
-                strat.run_fused(self, s)
+                if self._fused_cm is not None:
+                    with self._fused_cm():
+                        strat.run_fused(self, s)
+                else:
+                    strat.run_fused(self, s)
             else:
                 loaded = self.ckpt_resume(s, {"params": s.params})
                 if loaded is not None:

@@ -81,6 +81,15 @@ def tree_combine_many(stacked: Any, weight_rows: Any) -> Any:
     return jax.tree.map(lambda x: jnp.einsum("ks,s...->k...", w, x), stacked)
 
 
+def _h2d(x: Any, dtype: Any) -> jnp.ndarray:
+    """Explicit host->device upload of a plan tensor: cast in numpy
+    first so the device copy is dtype-preserving. A *casting*
+    ``jnp.asarray(x, dtype)`` counts as an implicit transfer under
+    ``jax.transfer_guard`` and the sanitizer (repro.debug.sanitize)
+    runs the block loop with transfers disallowed."""
+    return jnp.asarray(np.asarray(x, dtype))
+
+
 class FusedExecutor:
     """Device-resident data + jitted block programs for one engine."""
 
@@ -186,6 +195,19 @@ class FusedExecutor:
             self._jit[key] = fn
         return fn(params)
 
+    def zero_rows(self, params: Any, n: int) -> Any:
+        """(n, ...) zero-filled stacked tree matching ``params`` leaves,
+        built inside jit (an eager ``jnp.zeros`` is a host->device
+        scalar transfer, which the sanitizer's transfer guard rejects
+        in the block loop)."""
+        key = ("zeros", n)
+        fn = self._jit.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p: jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), p))
+            self._jit[key] = fn
+        return fn(params)
+
     # -------------------------------------------- synchronous round family
     def run_block(self, params: Any, idx: np.ndarray, mu: np.ndarray,
                   do_eval: np.ndarray, valid: np.ndarray):
@@ -233,8 +255,8 @@ class FusedExecutor:
 
             fn = jax.jit(block, donate_argnums=0)
             self._jit[key] = fn
-        params, accs = fn(params, jnp.asarray(idx, jnp.int32),
-                          jnp.asarray(mu, jnp.float32),
+        params, accs = fn(params, _h2d(idx, np.int32),
+                          _h2d(mu, np.float32),
                           jnp.asarray(do_eval), jnp.asarray(valid))
         return params, np.asarray(accs)
 
@@ -289,8 +311,8 @@ class FusedExecutor:
             fn = jax.jit(sharded, donate_argnums=0)
             self._jit[key] = fn
         params, accs = fn(self._replicate(params),
-                          jnp.asarray(idx, jnp.int32),
-                          jnp.asarray(mu, jnp.float32),
+                          _h2d(idx, np.int32),
+                          _h2d(mu, np.float32),
                           jnp.asarray(do_eval), jnp.asarray(valid))
         return params, np.asarray(accs)
 
@@ -302,7 +324,7 @@ class FusedExecutor:
         if fn is None:
             fn = jax.jit(tree_combine_many)
             self._jit[key] = fn
-        return fn(stacked, jnp.asarray(weight_rows, jnp.float32))
+        return fn(stacked, _h2d(weight_rows, np.float32))
 
     # ------------------------------------------------- routed event family
     def cycle_block(self, params: Any, bases: Any, buf: Any,
@@ -374,12 +396,12 @@ class FusedExecutor:
             self._jit[key] = fn
         g, bases, buf, accs = fn(
             params, bases, buf,
-            jnp.asarray(ev["l"], jnp.int32),
-            jnp.asarray(ev["idx"], jnp.int32),
-            jnp.asarray(ev["lam"], jnp.float32),
-            jnp.asarray(ev["rhos"], jnp.float32),
-            jnp.asarray(ev["keep"], jnp.float32),
-            jnp.asarray(ev["slot"], jnp.int32),
+            _h2d(ev["l"], np.int32),
+            _h2d(ev["idx"], np.int32),
+            _h2d(ev["lam"], np.float32),
+            _h2d(ev["rhos"], np.float32),
+            _h2d(ev["keep"], np.float32),
+            _h2d(ev["slot"], np.int32),
             jnp.asarray(ev["flush"]),
             jnp.asarray(ev["do_eval"]),
             jnp.asarray(ev["valid"]))
@@ -455,12 +477,12 @@ class FusedExecutor:
         g, bases, buf, accs = fn(
             self._replicate(params), self._replicate(bases),
             self._replicate(buf),
-            jnp.asarray(ev["l"], jnp.int32),
-            jnp.asarray(ev["idx"], jnp.int32),
-            jnp.asarray(ev["lam"], jnp.float32),
-            jnp.asarray(ev["rhos"], jnp.float32),
-            jnp.asarray(ev["keep"], jnp.float32),
-            jnp.asarray(ev["slot"], jnp.int32),
+            _h2d(ev["l"], np.int32),
+            _h2d(ev["idx"], np.int32),
+            _h2d(ev["lam"], np.float32),
+            _h2d(ev["rhos"], np.float32),
+            _h2d(ev["keep"], np.float32),
+            _h2d(ev["slot"], np.int32),
             jnp.asarray(ev["flush"]),
             jnp.asarray(ev["do_eval"]),
             jnp.asarray(ev["valid"]))
@@ -512,10 +534,10 @@ class FusedExecutor:
             fn = jax.jit(block)
             self._jit[key] = fn
         return fn(params, buf, stacked_k,
-                  jnp.asarray(ev["lam"], jnp.float32),
-                  jnp.asarray(ev["rhos"], jnp.float32),
-                  jnp.asarray(ev["keep"], jnp.float32),
-                  jnp.asarray(ev["slot"], jnp.int32),
+                  _h2d(ev["lam"], np.float32),
+                  _h2d(ev["rhos"], np.float32),
+                  _h2d(ev["keep"], np.float32),
+                  _h2d(ev["slot"], np.int32),
                   jnp.asarray(ev["flush"]),
                   jnp.asarray(ev["valid"]))
 
@@ -589,10 +611,10 @@ class FusedExecutor:
 
             fn = jax.jit(event, donate_argnums=(0, 1))
             self._jit[key] = fn
-        return fn(params, bases, jnp.asarray(visited, jnp.int32),
-                  jnp.asarray(idx, jnp.int32),
-                  jnp.asarray(lam_rows, jnp.float32),
-                  jnp.asarray(rhos, jnp.float32), jnp.asarray(valid))
+        return fn(params, bases, _h2d(visited, np.int32),
+                  _h2d(idx, np.int32),
+                  _h2d(lam_rows, np.float32),
+                  _h2d(rhos, np.float32), jnp.asarray(valid))
 
     def fedspace_train(self, params: Any, bases: Any, sats: np.ndarray,
                        idx: np.ndarray):
@@ -630,8 +652,8 @@ class FusedExecutor:
 
             fn = jax.jit(event, donate_argnums=1)
             self._jit[key] = fn
-        return fn(params, bases, jnp.asarray(sats, jnp.int32),
-                  jnp.asarray(idx, jnp.int32))
+        return fn(params, bases, _h2d(sats, np.int32),
+                  _h2d(idx, np.int32))
 
     def fedspace_flush(self, params: Any, stacked_deltas: Any,
                        wts: np.ndarray):
@@ -644,10 +666,20 @@ class FusedExecutor:
         if Bp > B:
             pad = Bp - B
             wts = np.concatenate([wts, np.zeros(pad)])
-            stacked_deltas = jax.tree.map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
-                stacked_deltas)
+            # Zero-padding happens inside jit: eager jnp.zeros (and
+            # even an eager x[0] slice) is a host->device transfer,
+            # which the sanitizer's guard rejects in the block loop.
+            # Pad programs are keyed per (B, Bp) but trivial; the
+            # expensive fold below stays O(log B) compiles.
+            pkey = ("pad_rows", B, Bp)
+            pfn = self._jit.get(pkey)
+            if pfn is None:
+                pfn = jax.jit(lambda t: jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
+                    t))
+                self._jit[pkey] = pfn
+            stacked_deltas = pfn(stacked_deltas)
         key = ("fedspace_flush", Bp)
         fn = self._jit.get(key)
         if fn is None:
@@ -657,7 +689,7 @@ class FusedExecutor:
 
             fn = jax.jit(flush, donate_argnums=0)
             self._jit[key] = fn
-        return fn(params, stacked_deltas, jnp.asarray(wts, jnp.float32))
+        return fn(params, stacked_deltas, _h2d(wts, np.float32))
 
 
 __all__ = ["FusedExecutor", "tree_combine_many"]

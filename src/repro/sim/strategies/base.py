@@ -37,8 +37,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple, Type
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.weights import staleness_discount
@@ -439,8 +437,7 @@ class CycleStrategy(Strategy):
         B = self.buffer_slots(eng)
         need = cfg.local_steps * eng.trainer.batch_size
         bases = ex.broadcast_rows(s.params, L)
-        buf = ex.broadcast_rows(
-            jax.tree.map(jnp.zeros_like, s.params), B)
+        buf = ex.zero_rows(s.params, B)
         st = None
         loaded = eng.ckpt_resume(
             s, {"params": s.params, "bases": bases, "buf": buf})

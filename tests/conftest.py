@@ -1,0 +1,12 @@
+"""Session-wide jax strictness for the test suite.
+
+Rank promotion is set to "raise": any `(B, D) + (D,)`-style silent
+broadcast in device code is a hard error, so every broadcast in the
+models/executor is spelled out explicitly (`b[None]`, `w[None, None]`).
+This is the static FHL005/FHL002 discipline enforced dynamically — a
+shape that "works" by accident is how sharded vs unsharded histories
+drift. See docs/INVARIANTS.md.
+"""
+import jax
+
+jax.config.update("jax_numpy_rank_promotion", "raise")

@@ -15,7 +15,6 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
-import dataclasses
 
 import jax
 

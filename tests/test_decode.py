@@ -64,7 +64,6 @@ def test_sliding_window_decode_matches_windowed_forward():
     tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
 
     # Reference: direct forward with window masking.
-    from repro.models.transformer import _apply_block  # intra-package
     ref, _ = _forward_with_window(model, params, tokens)
     cache = model.init_cache(b, s, use_window=True)
     # leaves are stacked (num_periods, batch, window, hkv, dh)

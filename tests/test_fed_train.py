@@ -1,6 +1,5 @@
 """Federated training integration (single-device logical round) +
 launch-spec sanitization unit tests."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

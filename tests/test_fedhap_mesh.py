@@ -10,7 +10,6 @@ import pathlib
 import subprocess
 import sys
 
-import pytest
 
 HELPERS = pathlib.Path(__file__).parent / "helpers"
 SRC = pathlib.Path(__file__).parent.parent / "src"

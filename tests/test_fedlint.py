@@ -1,0 +1,263 @@
+"""fedlint self-test: each rule FHL001-FHL006 fires on a seeded
+violation (with rule ID + file:line in the CLI output), the blessed
+idioms stay clean, suppressions require a justification, and the PR
+head lints clean via the real CLI. See docs/INVARIANTS.md."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+
+from tools.fedlint import lint_file, lint_paths
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _lint_src(tmp_path, source, name="seed.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    return lint_file(f)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+class TestFHL001GlobalRng:
+    def test_module_state_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            x = np.random.rand(3)
+        """)
+        assert _rules(fs) == {"FHL001"}
+        assert fs[0].line == 3
+
+    def test_seedless_default_rng_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            rng = np.random.default_rng()
+        """)
+        assert _rules(fs) == {"FHL001"}
+
+    def test_stdlib_random_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import random
+            x = random.random()
+        """)
+        assert _rules(fs) == {"FHL001"}
+
+    def test_counter_keyed_stream_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            rng = np.random.default_rng((seed, 0xFA17B10C, counter))
+            g: np.random.Generator = np.random.default_rng(7)
+        """)
+        assert fs == []
+
+
+class TestFHL002PlanPhaseImpurity:
+    def test_jnp_in_plan_hook_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax.numpy as jnp
+
+            class S:
+                def plan_round(self, eng, t):
+                    return jnp.sum(eng.mu)
+        """)
+        assert "FHL002" in _rules(fs)
+
+    def test_cross_file_reachability(self, tmp_path):
+        (tmp_path / "strat.py").write_text(textwrap.dedent("""
+            class S:
+                def plan_events(self, eng, st, k):
+                    return helper_fold(eng)
+        """))
+        (tmp_path / "helpers.py").write_text(textwrap.dedent("""
+            import jax
+
+            def helper_fold(eng):
+                return jax.device_get(eng.params)
+        """))
+        fs = lint_paths([str(tmp_path)])
+        assert _rules(fs) == {"FHL002"}
+        assert fs[0].path.endswith("helpers.py")
+
+    def test_pure_numpy_plan_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+
+            class S:
+                def plan_round(self, eng, t):
+                    return np.argsort(eng.mu)
+        """)
+        assert fs == []
+
+
+class TestFHL003DonatedReuse:
+    def test_use_after_donation_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax
+
+            def run(block, params, idx):
+                fn = jax.jit(block, donate_argnums=0)
+                out = fn(params, idx)
+                return params.mean()
+        """)
+        assert _rules(fs) == {"FHL003"}
+        assert fs[0].line == 7
+
+    def test_rebind_from_result_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax
+
+            def run(block, params, idx):
+                fn = jax.jit(block, donate_argnums=0)
+                params, accs = fn(params, idx)
+                return params, accs
+        """)
+        assert fs == []
+
+    def test_non_donated_args_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax
+
+            def run(block, params, idx):
+                fn = jax.jit(block, donate_argnums=0)
+                params = fn(params, idx)
+                return idx.sum()
+        """)
+        assert fs == []
+
+
+class TestFHL004HostSync:
+    def test_time_time_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import time
+            t0 = time.time()
+        """)
+        assert _rules(fs) == {"FHL004"}
+
+    def test_block_until_ready_in_loop_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax
+
+            def drive(fn, xs):
+                for x in xs:
+                    jax.block_until_ready(fn(x))
+        """)
+        assert _rules(fs) == {"FHL004"}
+
+    def test_perf_counter_and_single_sync_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import time, jax
+
+            def drive(fn, xs):
+                t0 = time.perf_counter()
+                out = [fn(x) for x in xs]
+                jax.block_until_ready(out)
+                return time.perf_counter() - t0
+        """)
+        assert fs == []
+
+
+class TestFHL005DtypeDrift:
+    def test_jnp_float64_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import jax.numpy as jnp
+            x = jnp.zeros(4, dtype=jnp.float64)
+        """)
+        assert "FHL005" in _rules(fs)
+
+    def test_f64_cast_into_jnp_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            import jax.numpy as jnp
+
+            def up(delays):
+                return jnp.asarray(delays.astype(np.float64))
+        """)
+        assert _rules(fs) == {"FHL005"}
+
+    def test_host_f64_and_explicit_f32_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            import jax.numpy as jnp
+
+            def plan(delays):
+                host = delays.astype(np.float64)
+                return jnp.asarray(host, jnp.float32)
+        """)
+        assert fs == []
+
+
+class TestFHL006SatPythonLoop:
+    def test_per_sat_loop_in_plan_flagged(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            class S:
+                def plan_round(self, eng, t):
+                    out = []
+                    for i in range(eng.n_sats):
+                        out.append(i)
+                    return out
+        """)
+        assert _rules(fs) == {"FHL006"}
+
+    def test_vectorized_plan_clean(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+
+            class S:
+                def plan_round(self, eng, t):
+                    return np.arange(eng.n_sats)
+        """)
+        assert fs == []
+
+    def test_loop_outside_plan_phase_ignored(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            def summarize(eng):
+                return [i for i in range(eng.n_sats)]
+        """)
+        assert fs == []
+
+
+class TestSuppressions:
+    def test_justified_suppression_silences(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            x = np.random.rand()  # fedlint: disable=FHL001 — bench jitter
+        """)
+        assert fs == []
+
+    def test_bare_suppression_is_a_finding(self, tmp_path):
+        fs = _lint_src(tmp_path, """
+            import numpy as np
+            x = np.random.rand()  # fedlint: disable=FHL001
+        """)
+        assert _rules(fs) == {"FHL001"}
+        assert any("justification" in f.message for f in fs)
+
+    def test_syntax_error_surfaces_as_fhl000(self, tmp_path):
+        fs = _lint_src(tmp_path, "def broken(:\n")
+        assert _rules(fs) == {"FHL000"}
+
+
+class TestCli:
+    def _run(self, *paths, cwd=REPO):
+        return subprocess.run(
+            [sys.executable, "-m", "tools.fedlint", *map(str, paths)],
+            cwd=cwd, capture_output=True, text=True,
+            env={"PYTHONPATH": str(REPO)})
+
+    def test_pr_head_lints_clean(self):
+        """The acceptance gate: the repo's own src/benchmarks/examples
+        must have zero unsuppressed findings."""
+        proc = self._run("src", "benchmarks", "examples")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_seeded_violation_fails_with_id_and_location(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("import time\nt0 = time.time()\n")
+        proc = self._run(bad)
+        assert proc.returncode == 1
+        assert "FHL004" in proc.stdout
+        assert "bad.py:2" in proc.stdout

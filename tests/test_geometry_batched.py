@@ -7,7 +7,6 @@ table stores float32), sampling gathers bit-identical to the per-client
 loop over the same uniform draws.
 """
 import dataclasses
-import math
 
 import numpy as np
 import pytest
@@ -15,7 +14,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.orbits import (
     EARTH_RADIUS_M,
-    Satellite,
     Station,
     WalkerConstellation,
     ephemeris_positions_eci,

@@ -7,8 +7,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.orbits.constellation import SPEED_OF_LIGHT
 from repro.orbits.links import (
-    FSO_DEFAULTS,
-    RF_DEFAULTS,
     RfLinkParams,
     free_space_path_loss,
     fso_channel_gain,

@@ -4,7 +4,6 @@ Each assigned architecture instantiates its REDUCED variant (<=2 layers or
 one pattern period, d_model<=256, <=4 experts) and runs one forward and one
 train step on CPU, asserting output shapes and the absence of NaNs.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

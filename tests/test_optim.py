@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
 

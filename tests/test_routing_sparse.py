@@ -2,12 +2,11 @@
 oracle, incremental window reuse, batched path extraction, and the
 batched election/exit engine paths — all exactness (bit-equality)
 checks, deterministic plus hypothesis properties when installed."""
-import dataclasses
 
 import numpy as np
 import pytest
 
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 from repro.orbits import WalkerConstellation
 from repro.orbits.routing import (
     SparseContactGraph,

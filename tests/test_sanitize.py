@@ -1,0 +1,127 @@
+"""Runtime sanitizer harness (repro.debug.sanitize): the fused block
+loop of every strategy runs clean under jax.transfer_guard("disallow")
++ strict dtype promotion + rank_promotion="raise", and each jitted
+block program compiles exactly once per block shape (the retrace
+budget). Complements tools/fedlint, which enforces the same invariants
+statically — see docs/INVARIANTS.md."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.debug import (RetraceDetector, RetraceError, compile_counts,
+                         sanitized, sanitized_run)
+from repro.sim import RoundEngine, SimConfig
+
+QUICK = dict(model_kind="mlp", num_samples=1500, eval_samples=300,
+             local_steps=2, horizon_h=36.0, time_step_s=120.0,
+             max_rounds=4)
+
+# Same scenario table as tests/test_sim_fused.py — all 8 strategies.
+SCENARIOS = [
+    ("fedhap", "one_hap"),
+    ("fedisl", "gs"),
+    ("fedisl_ideal", "meo"),
+    ("fedsat", "gs_np"),
+    ("fedspace", "gs"),
+    ("fedsink", "haps:2"),
+    ("fedhap_async", "haps:2"),
+    ("fedhap_buffered", "haps:2"),
+]
+
+
+class TestSanitizedStrategies:
+    @pytest.mark.parametrize("strategy,stations", SCENARIOS)
+    def test_fused_run_is_guard_clean(self, strategy, stations):
+        """Every strategy's block loop: no implicit transfers, no
+        implicit promotions, no retraces — and the sanitized history
+        matches an unsanitized run exactly (the guards must observe,
+        never perturb)."""
+        cfg = dict(strategy=strategy, stations=stations, **QUICK)
+        res, counts = sanitized_run(cfg)
+        assert res.rounds >= 1
+        assert counts, "executor never compiled anything?"
+        assert all(n == 1 for n in counts.values()), counts
+        plain = RoundEngine(SimConfig(**cfg)).run(fused=True)
+        assert plain.history == res.history
+        assert plain.sim_hours == res.sim_hours
+
+
+class TestRetraceBudget:
+    def _counts_after(self, strategy, stations, **over):
+        cfg = dict(strategy=strategy, stations=stations, **QUICK)
+        cfg.update(over)
+        eng = RoundEngine(SimConfig(**cfg))
+        det = RetraceDetector(eng.executor, budget=1)
+        eng.run(fused=True)
+        return det.check()
+
+    def test_fedhap_multi_block_single_compile(self):
+        """12 rounds at plan_block=4 = 3+ block dispatches through
+        run_block; the ("round", ...) program must trace once."""
+        counts = self._counts_after("fedhap", "one_hap",
+                                    max_rounds=12, plan_block=4)
+        round_keys = [k for k in counts if k[0] == "round"]
+        assert len(round_keys) == 1, counts
+        assert counts[round_keys[0]] == 1
+
+    def test_fedhap_async_multi_block_single_compile(self):
+        """Same for the cycle/event family: multi-block fedhap_async
+        must reuse one ("cycle", ...) program across blocks."""
+        counts = self._counts_after("fedhap_async", "haps:2",
+                                    max_rounds=12, plan_block=4)
+        cycle_keys = [k for k in counts if k[0] == "cycle"]
+        assert len(cycle_keys) == 1, counts
+        assert counts[cycle_keys[0]] == 1
+
+    def test_detector_flags_synthetic_retrace(self):
+        """A fake executor whose 'program' reports 3 traces must trip
+        the budget with the offending key in the message."""
+        class FakeFn:
+            def _cache_size(self):
+                return 3
+
+        class FakeExec:
+            _jit = {}
+
+        ex = FakeExec()
+        det = RetraceDetector(ex, budget=1)   # baseline: empty cache
+        ex._jit[("round", 8, 40, 2)] = FakeFn()
+        with pytest.raises(RetraceError, match="round"):
+            det.check()
+
+    def test_compile_counts_reads_real_jit_cache(self):
+        ex = type("E", (), {"_jit": {("k",): jax.jit(lambda x: x + 1)}})()
+        assert compile_counts(ex) == {("k",): 0}
+        ex._jit[("k",)](jnp.ones(3))
+        assert compile_counts(ex) == {("k",): 1}
+
+
+class TestSanitizedContext:
+    def test_blocks_implicit_scalar_transfer(self):
+        with pytest.raises(Exception, match="[Tt]ransfer"):
+            with sanitized():
+                jnp.asarray(3)
+
+    def test_blocks_rank_promotion(self):
+        a = jnp.ones((4, 3))
+        b = jnp.ones((3,))
+        with pytest.raises(ValueError, match="rank_promotion"):
+            with sanitized(transfer=None):
+                _ = a + b
+
+    def test_blocks_implicit_dtype_promotion(self):
+        a = jnp.ones((3,), jnp.float32)
+        b = jnp.ones((3,), jnp.float16)
+        with pytest.raises(Exception, match="promotion"):
+            with sanitized(transfer=None):
+                _ = a + b
+
+    def test_explicit_paths_stay_allowed(self):
+        """The blessed idioms of the executor hot path must pass: numpy
+        cast then dtype-preserving upload, and explicit downloads."""
+        with sanitized():
+            x = jnp.asarray(np.asarray([1, 2], np.int32))
+            y = jax.jit(lambda v: v * 2)(x)
+            out = np.asarray(y)
+        assert out.tolist() == [2, 4]

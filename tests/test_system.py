@@ -4,10 +4,7 @@ These exercise the full stack the way a user would: constellation ->
 visibility -> FedHAP rounds -> trained global model, plus the public
 config/registry surface and the paper's core aggregation semantics.
 """
-import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

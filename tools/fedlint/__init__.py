@@ -1,0 +1,66 @@
+"""fedlint: repo-specific invariant-enforcing static analysis.
+
+Every headline result in this repo is a bit-exactness claim — fused ==
+per-round, stitched == oracle, CSR == dense, sharded histories
+device-count independent, resumed == uninterrupted — and each rests on
+code invariants that equivalence tests only catch *after* they corrupt
+a history. fedlint rejects invariant-breaking code at review time:
+
+==========  ==========================================================
+rule        invariant it guards
+==========  ==========================================================
+FHL001      global-rng: all randomness flows through counter-keyed
+            ``(seed, salt, counter)`` streams — ``np.random.<fn>``
+            module-state calls, seedless ``default_rng()``, and the
+            stdlib ``random`` module are banned (they break the
+            fused == per-round stream-equality proofs).
+FHL002      plan-phase-impurity: functions reachable from the plan
+            phase (``plan_round`` / ``plan_events`` /
+            ``schedule_cycle*`` / ``plan_fold`` / ``_plan_tick`` ...)
+            must be pure numpy — touching ``jax``/``jnp`` there means
+            device sync or tracing inside what must stay host-side
+            planning (the PR-4 plan/execute contract).
+FHL003      donated-reuse: an argument passed at a donated position of
+            a ``jax.jit(..., donate_argnums=...)`` call site is dead —
+            reading it afterwards is use-after-free on the donated
+            buffer (only rebinding from the call result is safe).
+FHL004      host-sync-in-hot-loop: ``time.time()`` (non-monotonic
+            wall clock used for durations) anywhere, and
+            ``block_until_ready`` / device syncs inside loop bodies of
+            the executor hot path.
+FHL005      dtype-drift: float64 values crossing into device code
+            (``jnp.*`` calls with float64 dtypes or ``.astype(f64)``
+            arguments) — host pricing is float64, device folds are
+            float32; implicit promotion changes histories per backend.
+FHL006      sat-python-loop: per-satellite Python loops inside
+            plan-phase hot paths — plans must be vectorized over the
+            satellite axis (``n_sats``-range loops are the O(S)
+            regressions PR 2/6/8 removed).
+==========  ==========================================================
+
+Suppressing an intentional violation requires a justification::
+
+    x = np.random.rand()  # fedlint: disable=FHL001 — bench-only jitter
+
+A bare ``# fedlint: disable=FHL001`` (no reason text) does NOT
+suppress; the reason is part of the contract. Multiple IDs separate
+with commas. The CLI (``python -m tools.fedlint PATH...``) exits
+non-zero when any unsuppressed finding remains, printing
+``file:line: FHL00x message``.
+"""
+from tools.fedlint.engine import (
+    Finding,
+    lint_file,
+    lint_paths,
+    parse_suppressions,
+)
+from tools.fedlint.rules import ALL_RULES, RULE_DOCS
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "RULE_DOCS",
+    "lint_file",
+    "lint_paths",
+    "parse_suppressions",
+]

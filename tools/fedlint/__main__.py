@@ -1,0 +1,39 @@
+"""CLI: ``python -m tools.fedlint PATH [PATH ...]``.
+
+Prints ``file:line: FHL00x message`` per finding and exits non-zero if
+any unsuppressed finding remains — the contract the ``lint`` CI job and
+``tests/test_fedlint.py`` both rely on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.fedlint.engine import lint_paths
+from tools.fedlint.rules import RULE_DOCS
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.fedlint",
+        description="repo-specific invariant lint (rules FHL001-FHL006)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+    if args.rules:
+        for rid, doc in sorted(RULE_DOCS.items()):
+            print(f"{rid}  {doc}")
+        return 0
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f.format())
+    if findings:
+        print(f"fedlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

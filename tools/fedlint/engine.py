@@ -1,0 +1,147 @@
+"""fedlint driver: file walking, suppression comments, finding model.
+
+The rules themselves live in :mod:`tools.fedlint.rules`; this module
+owns everything rule-independent — parsing files, collecting
+``# fedlint: disable=FHL00x — reason`` comments (tokenize-based, so
+strings containing the marker don't suppress anything), filtering
+findings through them, and the path-walking entry point the CLI and
+``tests/test_fedlint.py`` share.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional, Sequence
+
+_DISABLE_RE = re.compile(
+    r"fedlint:\s*disable(?P<file>-file)?\s*=\s*"
+    r"(?P<ids>FHL\d{3}(?:\s*,\s*FHL\d{3})*)"
+    r"\s*(?:[—–-]+\s*(?P<reason>\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str           # "FHL001" ... "FHL006"
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rule: str
+    line: int           # physical line of the comment; 0 = whole file
+    has_reason: bool
+
+
+def parse_suppressions(source: str) -> list[Suppression]:
+    """Collect ``# fedlint: disable=...`` comments from real comment
+    tokens. A suppression without a reason is returned with
+    ``has_reason=False`` — it will NOT silence findings (the driver
+    reports it as a malformed suppression instead)."""
+    out: list[Suppression] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _DISABLE_RE.search(tok.string)
+            if not m:
+                continue
+            line = 0 if m.group("file") else tok.start[0]
+            for rule in re.split(r"\s*,\s*", m.group("ids")):
+                out.append(Suppression(rule, line,
+                                       m.group("reason") is not None))
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def _apply_suppressions(findings: Sequence[Finding],
+                        sups: Sequence[Suppression],
+                        path: str) -> list[Finding]:
+    """Drop findings covered by a justified suppression on the same
+    line (or a file-level one); surface unjustified suppression
+    comments as findings of the rule they tried to silence."""
+    out = []
+    by_line = {(s.rule, s.line) for s in sups if s.has_reason}
+    file_wide = {s.rule for s in sups if s.has_reason and s.line == 0}
+    for f in findings:
+        if f.rule in file_wide or (f.rule, f.line) in by_line:
+            continue
+        out.append(f)
+    for s in sups:
+        if not s.has_reason:
+            out.append(Finding(
+                s.rule, path, s.line or 1,
+                "suppression without a justification — write "
+                f"'# fedlint: disable={s.rule} — <reason>'"))
+    return sorted(out, key=lambda f: (f.line, f.rule))
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterable[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def _lint_sources(sources: dict[str, str],
+                  rules: Optional[Sequence] = None) -> list[Finding]:
+    """Core driver over an in-memory {path: source} universe.
+
+    Per-file rules run file by file; the plan-phase rules (FHL002/006)
+    run once over every successfully-parsed tree because plan purity is
+    a *reachability* property — a strategy's ``plan_round`` calling an
+    engine method calling a routing helper spans three files. Syntax
+    errors surface as rule ``FHL000`` so a broken file can't silently
+    pass the lint tier.
+    """
+    from tools.fedlint.rules import ALL_RULES, plan_phase_findings
+    trees: dict[str, ast.Module] = {}
+    per_file: dict[str, list[Finding]] = {}
+    out: list[Finding] = []
+    for spath, source in sources.items():
+        try:
+            trees[spath] = ast.parse(source, filename=spath)
+        except SyntaxError as e:
+            out.append(Finding("FHL000", spath, e.lineno or 1,
+                               f"syntax error: {e.msg}"))
+            continue
+        per_file[spath] = []
+        for rule in (ALL_RULES if rules is None else rules):
+            per_file[spath].extend(rule(trees[spath], spath,
+                                        sources[spath]))
+    if rules is None:
+        for f in plan_phase_findings(trees):
+            per_file.setdefault(f.path, []).append(f)
+    for spath, findings in per_file.items():
+        out.extend(_apply_suppressions(
+            findings, parse_suppressions(sources[spath]), spath))
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_file(path: Path, source: Optional[str] = None,
+              rules: Optional[Sequence] = None) -> list[Finding]:
+    """Lint a single file (universe of one — cross-file reachability
+    reduces to intra-file)."""
+    if source is None:
+        source = path.read_text()
+    return _lint_sources({str(path): source}, rules)
+
+
+def lint_paths(paths: Iterable[str]) -> list[Finding]:
+    """Lint every ``*.py`` under the given files/directories as one
+    universe (so FHL002/006 see cross-file call chains)."""
+    sources = {str(f): f.read_text() for f in iter_python_files(paths)}
+    return _lint_sources(sources)

@@ -1,0 +1,503 @@
+"""fedlint rule implementations (see package docstring for the table).
+
+Per-file rules (FHL001/003/004/005) are callables
+``rule(tree, path, source) -> list[Finding]``. The plan-phase rules
+(FHL002/006) need cross-file reachability — strategies' plan hooks call
+engine methods which call routing/client-plane functions — so they run
+once per lint invocation over the whole parsed universe
+(:func:`plan_phase_findings`); the driver wires both shapes up.
+
+All analysis is plain stdlib ``ast``: no type inference, no imports of
+the linted code. Rules prefer false negatives over false positives —
+each one encodes the *specific* idiom this repo's invariants ban, not a
+general-purpose style check.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.fedlint.engine import Finding
+
+RULE_DOCS = {
+    "FHL001": "global-rng: np.random module state / seedless "
+              "default_rng() / stdlib random outside counter-keyed "
+              "(seed, salt, counter) streams",
+    "FHL002": "plan-phase-impurity: jax/jnp reachable from a "
+              "plan-phase function (the PR-4 pure-numpy plan contract)",
+    "FHL003": "donated-reuse: argument read after being passed at a "
+              "donated position of a jax.jit(..., donate_argnums=...) "
+              "call site",
+    "FHL004": "host-sync-in-hot-loop: time.time() wall-clock "
+              "durations; block_until_ready inside loop bodies",
+    "FHL005": "dtype-drift: float64 crossing into jnp/device code "
+              "(host pricing is float64, device folds are float32)",
+    "FHL006": "sat-python-loop: per-satellite Python loop in a "
+              "plan-phase hot path (plans are vectorized over the "
+              "satellite axis)",
+}
+
+# Functions whose bodies (and transitive callees) form the pure-numpy
+# plan phase. Strategy hooks + the batched plan drivers; anything ONLY
+# called by the execute phase (step / run_fused / fold) is not here.
+PLAN_ENTRY_NAMES = frozenset({
+    "plan_round",
+    "plan_events",
+    "plan_fold",
+    "schedule_cycle",
+    "schedule_cycle_batch",
+    "init_plan_state",
+    "_plan_tick",
+    "_plan_launch_batch",
+})
+
+# np.random attributes that name types, not samplers — legitimate in
+# annotations and isinstance checks.
+_NP_RANDOM_TYPES = frozenset({"Generator", "BitGenerator",
+                              "SeedSequence", "Philox", "PCG64"})
+
+
+# --------------------------------------------------------------- helpers
+def _attach_parents(tree: ast.Module) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._fedlint_parent = node  # type: ignore[attr-defined]
+
+
+def _parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_fedlint_parent", None)
+
+
+def _attr_chain(node: ast.AST) -> Optional[tuple[str, ...]]:
+    """("np", "random", "default_rng") for np.random.default_rng; None
+    for anything not a pure Name/Attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _annotation_nodes(tree: ast.Module) -> set[int]:
+    """ids of every node inside an annotation subtree (skipped by rules
+    that ban *uses*, not type references)."""
+    out: set[int] = set()
+
+    def add(sub: Optional[ast.AST]) -> None:
+        if sub is not None:
+            for n in ast.walk(sub):
+                out.add(id(n))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            add(node.returns)
+            for a in (node.args.args + node.args.posonlyargs
+                      + node.args.kwonlyargs):
+                add(a.annotation)
+            for a in (node.args.vararg, node.args.kwarg):
+                if a is not None:
+                    add(a.annotation)
+        elif isinstance(node, ast.AnnAssign):
+            add(node.annotation)
+    return out
+
+
+def _enclosing_loop(node: ast.AST) -> Optional[ast.AST]:
+    cur = _parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.For, ast.While)):
+            return cur
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return None          # loops outside this function don't count
+        cur = _parent(cur)
+    return None
+
+
+def _enclosing_stmt(node: ast.AST) -> ast.stmt:
+    cur: ast.AST = node
+    while not isinstance(cur, ast.stmt):
+        cur = _parent(cur)       # a Call always sits under some stmt
+    return cur
+
+
+# ------------------------------------------------------ FHL001 global-rng
+def rule_global_rng(tree: ast.Module, path: str,
+                    source: str) -> list[Finding]:
+    _attach_parents(tree)
+    anns = _annotation_nodes(tree)
+    findings = []
+    stdlib_random = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random":
+                    stdlib_random = True
+                    findings.append(Finding(
+                        "FHL001", path, node.lineno,
+                        "stdlib `random` import — all randomness must "
+                        "flow through counter-keyed np.random."
+                        "default_rng((seed, salt, counter)) streams"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "random" and node.level == 0:
+                findings.append(Finding(
+                    "FHL001", path, node.lineno,
+                    "stdlib `random` import — use counter-keyed "
+                    "default_rng streams"))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Attribute) or id(node) in anns:
+            continue
+        chain = _attr_chain(node)
+        if chain is None:
+            continue
+        if chain[0] in ("np", "numpy") and len(chain) >= 3 \
+                and chain[1] == "random":
+            leaf = chain[2]
+            if leaf in _NP_RANDOM_TYPES:
+                continue
+            if leaf == "default_rng":
+                parent = _parent(node)
+                if isinstance(parent, ast.Call) and parent.func is node \
+                        and (parent.args or parent.keywords):
+                    continue     # seeded stream: fine
+                findings.append(Finding(
+                    "FHL001", path, node.lineno,
+                    "seedless np.random.default_rng() draws OS entropy "
+                    "— pass a counter-keyed (seed, salt, counter) key"))
+            else:
+                findings.append(Finding(
+                    "FHL001", path, node.lineno,
+                    f"np.random.{leaf} uses global numpy rng state — "
+                    "use a counter-keyed default_rng stream"))
+        elif stdlib_random and chain[0] == "random" and len(chain) >= 2:
+            findings.append(Finding(
+                "FHL001", path, node.lineno,
+                f"stdlib random.{chain[1]} — use a counter-keyed "
+                "default_rng stream"))
+    return findings
+
+
+# --------------------------------------------------- FHL003 donated-reuse
+def _donated_positions(call: ast.Call) -> Optional[list[int]]:
+    """donate_argnums of a ``jax.jit`` call, or None if not one."""
+    chain = _attr_chain(call.func)
+    if chain is None or chain[-1] != "jit" or \
+            chain[0] not in ("jax", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and \
+                            isinstance(elt.value, int):
+                        out.append(elt.value)
+                return out
+    return None
+
+
+def _stmt_assign_targets(stmt: ast.stmt) -> set[str]:
+    names: set[str] = set()
+    targets: Iterable[ast.AST] = ()
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = (stmt.target,)
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def rule_donated_reuse(tree: ast.Module, path: str,
+                       source: str) -> list[Finding]:
+    _attach_parents(tree)
+    findings = []
+    for func in ast.walk(tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # jitted-callable locals of THIS function: name -> donated pos
+        donated: dict[str, list[int]] = {}
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                pos = _donated_positions(node.value)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            donated[t.id] = pos
+        if not donated:
+            continue
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donated):
+                continue
+            stmt = _enclosing_stmt(node)
+            rebound = _stmt_assign_targets(stmt)
+            for pos in donated[node.func.id]:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not isinstance(arg, ast.Name) or arg.id in rebound:
+                    continue
+                use = _first_use_after(func, arg.id, stmt)
+                if use is not None:
+                    findings.append(Finding(
+                        "FHL003", path, use.lineno,
+                        f"`{arg.id}` read after being donated to "
+                        f"`{node.func.id}` (jax.jit donate_argnums="
+                        f"{pos}) at line {node.lineno} — donated "
+                        "buffers are dead; rebind from the call result"))
+    return findings
+
+
+def _first_use_after(func: ast.AST, name: str,
+                     stmt: ast.stmt) -> Optional[ast.Name]:
+    """First Load of ``name`` after ``stmt`` in source order, unless a
+    store to it comes first (rebinding kills the taint)."""
+    boundary = (stmt.end_lineno or stmt.lineno, 10 ** 6)
+    events: list[tuple[tuple[int, int], str, ast.Name]] = []
+    for n in ast.walk(func):
+        if isinstance(n, ast.Name) and n.id == name:
+            key = (n.lineno, n.col_offset)
+            if key > boundary:
+                kind = "load" if isinstance(n.ctx, ast.Load) else "store"
+                events.append((key, kind, n))
+    for _, kind, n in sorted(events, key=lambda e: e[0]):
+        if kind == "store":
+            return None
+        return n
+    return None
+
+
+# ------------------------------------------- FHL004 host-sync-in-hot-loop
+def rule_host_sync(tree: ast.Module, path: str,
+                   source: str) -> list[Finding]:
+    _attach_parents(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain == ("time", "time"):
+            findings.append(Finding(
+                "FHL004", path, node.lineno,
+                "time.time() is wall-clock (non-monotonic) — use "
+                "time.perf_counter() for durations"))
+        elif chain is not None and chain[-1] == "block_until_ready" \
+                and _enclosing_loop(node) is not None:
+            findings.append(Finding(
+                "FHL004", path, node.lineno,
+                "block_until_ready inside a loop body serializes the "
+                "dispatch pipeline — sync once per block, outside"))
+    return findings
+
+
+# ----------------------------------------------------- FHL005 dtype-drift
+def _is_f64(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    if chain is not None and chain[-1] in ("float64", "double"):
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float64"
+
+
+def _contains_f64_cast(node: ast.AST) -> Optional[int]:
+    """Line of a float64 produced inside ``node``: np.float64(...) calls
+    or .astype(float64) casts feeding device code."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            chain = _attr_chain(n.func)
+            if chain is not None and chain[-1] in ("float64", "double"):
+                return n.lineno
+            if isinstance(n.func, ast.Attribute) and \
+                    n.func.attr == "astype" and n.args and \
+                    _is_f64(n.args[0]):
+                return n.lineno
+    return None
+
+
+def rule_dtype_drift(tree: ast.Module, path: str,
+                     source: str) -> list[Finding]:
+    _attach_parents(tree)
+    findings = []
+    for node in ast.walk(tree):
+        # jnp.float64 anywhere is drift bait (x64 is disabled; it
+        # silently truncates — or flips histories when enabled).
+        chain = _attr_chain(node) if isinstance(node, ast.Attribute) \
+            else None
+        if chain is not None and chain[0] == "jnp" and \
+                chain[-1] in ("float64", "double"):
+            findings.append(Finding(
+                "FHL005", path, node.lineno,
+                "jnp.float64 — device code is float32; float64 lives "
+                "on the host side of the plan/execute split"))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        fchain = _attr_chain(node.func)
+        if fchain is None or fchain[0] != "jnp":
+            continue
+        for kw in node.keywords:
+            if kw.arg == "dtype" and _is_f64(kw.value):
+                findings.append(Finding(
+                    "FHL005", path, node.lineno,
+                    f"jnp.{fchain[-1]}(dtype=float64) — float64 must "
+                    "not cross into device code"))
+        if fchain[-1] in ("asarray", "array"):
+            has_dtype = any(kw.arg == "dtype" for kw in node.keywords) \
+                or len(node.args) >= 2
+            if len(node.args) >= 2 and _is_f64(node.args[1]):
+                findings.append(Finding(
+                    "FHL005", path, node.lineno,
+                    f"jnp.{fchain[-1]}(..., float64) — float64 must "
+                    "not cross into device code"))
+            elif not has_dtype and node.args:
+                line = _contains_f64_cast(node.args[0])
+                if line is not None:
+                    findings.append(Finding(
+                        "FHL005", path, line,
+                        "float64 host value passed to "
+                        f"jnp.{fchain[-1]} without an explicit dtype — "
+                        "implicit promotion drifts across backends"))
+    return findings
+
+
+# ----------------------------------- FHL002 + FHL006 (plan-phase, global)
+# Call-edge resolution is by name, so two exclusions keep it honest:
+# attribute calls whose receiver is an external module (``np.stack``
+# must not edge into a repo function named ``stack``), and
+# dict/set-protocol method names (``cache.update(...)`` must not edge
+# into ``Optimizer.update``). Anything jax-flavoured a plan hook calls
+# through an excluded name is still caught by the direct jax/jnp scan
+# of every reachable body.
+_EXTERNAL_RECEIVERS = frozenset({
+    "np", "numpy", "jnp", "jax", "lax", "math", "os", "sys", "time",
+    "json", "re", "itertools", "functools", "collections",
+    "dataclasses", "pathlib", "logging", "pickle", "struct", "hashlib",
+    "ast", "io", "tokenize", "argparse", "warnings",
+})
+_AMBIGUOUS_METHODS = frozenset({
+    "update", "get", "items", "keys", "values", "append", "extend",
+    "pop", "add", "copy", "clear", "setdefault", "sort", "split",
+    "join", "strip", "format", "index", "count", "remove",
+})
+
+
+class _FuncInfo:
+    __slots__ = ("path", "node", "calls")
+
+    def __init__(self, path: str, node: ast.AST):
+        self.path = path
+        self.node = node
+        self.calls: set[str] = set()
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                if isinstance(n.func, ast.Name):
+                    self.calls.add(n.func.id)
+                elif isinstance(n.func, ast.Attribute):
+                    if n.func.attr in _AMBIGUOUS_METHODS:
+                        continue
+                    chain = _attr_chain(n.func)
+                    if chain is not None and \
+                            chain[0] in _EXTERNAL_RECEIVERS:
+                        continue
+                    self.calls.add(n.func.attr)
+
+
+def plan_phase_findings(universe: dict[str, ast.Module]) -> list[Finding]:
+    """FHL002 (jax/jnp reachable from plan phase) and FHL006
+    (per-satellite Python loops in plan paths) over the whole linted
+    file set.
+
+    Reachability is name-matched: a call ``x.foo(...)`` or ``foo(...)``
+    reaches every function *defined* as ``foo`` anywhere in the
+    universe. That over-approximates (several defs share a name ->
+    all are checked), which is the conservative direction for an
+    invariant lint; builtins and external-library attrs match no defs
+    and drop out.
+    """
+    by_name: dict[str, list[_FuncInfo]] = {}
+    infos: list[_FuncInfo] = []
+    for path, tree in universe.items():
+        _attach_parents(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = _FuncInfo(path, node)
+                infos.append(fi)
+                by_name.setdefault(node.name, []).append(fi)
+
+    # BFS from the plan entry hooks, recording the entry each function
+    # was first reached from (for the finding message).
+    entry_of: dict[int, str] = {}
+    work: list[_FuncInfo] = []
+    for name in PLAN_ENTRY_NAMES:
+        for fi in by_name.get(name, ()):
+            if id(fi) not in entry_of:
+                entry_of[id(fi)] = name
+                work.append(fi)
+    while work:
+        fi = work.pop()
+        for callee in fi.calls:
+            if callee in PLAN_ENTRY_NAMES:
+                continue         # already seeded as entries themselves
+            for target in by_name.get(callee, ()):
+                if id(target) not in entry_of:
+                    entry_of[id(target)] = entry_of[id(fi)]
+                    work.append(target)
+
+    findings = []
+    for fi in infos:
+        entry = entry_of.get(id(fi))
+        if entry is None:
+            continue
+        anns = set()
+        for node in ast.walk(fi.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ([node.returns]
+                            + [a.annotation for a in node.args.args]):
+                    if sub is not None:
+                        anns.update(id(n) for n in ast.walk(sub))
+        via = "" if fi.node.name == entry else \
+            f" (reachable from plan hook `{entry}`)"
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Name) and node.id in ("jax", "jnp") \
+                    and isinstance(node.ctx, ast.Load) \
+                    and id(node) not in anns:
+                findings.append(Finding(
+                    "FHL002", fi.path, node.lineno,
+                    f"`{node.id}` used in plan-phase function "
+                    f"`{fi.node.name}`{via} — plans are pure numpy "
+                    "(PR-4 plan/execute contract)"))
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                try:
+                    src = ast.unparse(it)
+                except Exception:  # pragma: no cover - unparse is total
+                    continue
+                if "n_sats" in src or ".satellites" in src:
+                    line = it.lineno if hasattr(it, "lineno") \
+                        else fi.node.lineno
+                    findings.append(Finding(
+                        "FHL006", fi.path, line,
+                        f"per-satellite Python loop over `{src}` in "
+                        f"plan-phase function `{fi.node.name}`{via} — "
+                        "vectorize over the satellite axis"))
+    return findings
+
+
+ALL_RULES = (
+    rule_global_rng,
+    rule_donated_reuse,
+    rule_host_sync,
+    rule_dtype_drift,
+)
+
+__all__ = ["ALL_RULES", "PLAN_ENTRY_NAMES", "RULE_DOCS",
+           "plan_phase_findings"]
